@@ -1,0 +1,52 @@
+"""Fig. 5 reproduction: design-space exploration curves.
+
+For each network and device (the paper's PYNQ-Z2 point design and our TPU
+v5e target), emit every legal (T_OH, CTC, attainable GOps/s) point, the
+bandwidth-bound flag (left of the slope), and the chosen unified tiling
+factor."""
+from __future__ import annotations
+
+from repro.core.dse import PYNQ_Z2, TPU_V5E, layer_dse, optimize_unified_tile, per_layer_optimum
+from repro.models.dcnn import CELEBA_DCNN, MNIST_DCNN
+
+
+def run():
+    out = {}
+    for cfg in (MNIST_DCNN, CELEBA_DCNN):
+        geoms = cfg.geometries()
+        for dev in (PYNQ_Z2, TPU_V5E):
+            co = 32 if dev is PYNQ_Z2 else 128
+            best, scores = optimize_unified_tile(geoms, dev, co_tile=co)
+            per_layer = per_layer_optimum(geoms, dev, co_tile=co)
+            curves = {f"L{i+1}": [(p.t_oh, p.ctc, p.attainable_ops,
+                                   p.bandwidth_bound)
+                                  for p in layer_dse(g, dev, co_tile=co)]
+                      for i, g in enumerate(geoms)}
+            out[(cfg.name, dev.name)] = {
+                "unified_t_oh": best,
+                "unified_scores": scores,
+                "per_layer_best": [(p.t_oh, p.attainable_ops)
+                                   for p in per_layer],
+                "curves": curves,
+            }
+    return out
+
+
+def main():
+    res = run()
+    print("# Fig. 5 analogue: unified tiling factor by network x device")
+    for (net, dev), r in res.items():
+        print(f"\n{net} on {dev}: unified T_OH = {r['unified_t_oh']} "
+              f"(net attainable {r['unified_scores'][r['unified_t_oh']]/1e9:.2f} GOps/s)")
+        print("  per-layer optimum (paper future work): "
+              + ", ".join(f"T={t} ({a/1e9:.1f}G)" for t, a in r["per_layer_best"]))
+        for lname, pts in r["curves"].items():
+            bw = sum(1 for p in pts if p[3])
+            print(f"  {lname}: {len(pts)} legal tiles, {bw} bandwidth-bound")
+    # paper reference points: T_OH=12 (MNIST), 24 (CelebA) on PYNQ-Z2
+    print("\npaper reference: MNIST T_OH=12, CelebA T_OH=24 (Table I)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Table I reproduction: resource budget of the chosen design point.
+
+The paper reports DSP48s/BRAMs/FFs/LUTs at T_OH=12 (MNIST) / 24 (CelebA) on
+the PYNQ-Z2.  The TPU analogue of the constrained resource is VMEM: we
+report, per network, the DSE-chosen unified tiling factor and the VMEM
+footprint of every layer's kernel invocation at that tile (vs the 16 MiB
+budget), plus the paper's own FPGA figures for the eq5 dataflow model."""
+from __future__ import annotations
+
+from repro.core.dse import PYNQ_Z2, TPU_V5E, optimize_unified_tile
+from repro.core.tiling import vmem_footprint
+from repro.models.dcnn import CELEBA_DCNN, MNIST_DCNN
+
+PAPER_TABLE1 = {
+    "dcnn-mnist": {"t_oh": 12, "dsp": 134, "bram": 50, "ff": 43218, "lut": 36469},
+    "dcnn-celeba": {"t_oh": 24, "dsp": 134, "bram": 74, "ff": 48938, "lut": 40923},
+}
+
+
+def run():
+    out = {}
+    for cfg in (MNIST_DCNN, CELEBA_DCNN):
+        geoms = cfg.geometries()
+        t_tpu, _ = optimize_unified_tile(geoms, TPU_V5E)
+        t_pynq, _ = optimize_unified_tile(geoms, PYNQ_Z2, co_tile=32)
+        layers = []
+        for g in geoms:
+            t_eff = min(t_tpu, g.out_h + (-g.out_h) % g.stride)
+            layers.append({
+                "geom": f"{g.in_h}x{g.in_w}x{g.c_in}->"
+                        f"{g.out_h}x{g.out_w}x{g.c_out} K{g.kernel}S{g.stride}",
+                "vmem_bytes": vmem_footprint(g, t_eff, 128, 2),
+                "pynq_bram_bytes": vmem_footprint(g, min(t_pynq, g.out_h),
+                                                  32, 4, "eq5"),
+            })
+        out[cfg.name] = {"t_oh_tpu": t_tpu, "t_oh_pynq": t_pynq,
+                         "layers": layers,
+                         "paper": PAPER_TABLE1[cfg.name]}
+    return out
+
+
+def main():
+    res = run()
+    print("# Table I analogue: unified tile + on-chip budget per layer")
+    for net, r in res.items():
+        pp = r["paper"]
+        print(f"\n{net}: unified T_OH tpu={r['t_oh_tpu']} "
+              f"pynq={r['t_oh_pynq']} (paper: {pp['t_oh']}; "
+              f"paper resources: {pp['dsp']} DSP48, {pp['bram']} BRAM)")
+        for l in r["layers"]:
+            print(f"  {l['geom']:34s} vmem {l['vmem_bytes']/2**20:6.2f} MiB"
+                  f" / 16  |  pynq-eq5 {l['pynq_bram_bytes']/2**10:7.1f} KiB"
+                  f" / 614")
+    return res
+
+
+if __name__ == "__main__":
+    main()

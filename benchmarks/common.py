@@ -1,0 +1,27 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, reps: int = 50, warmup: int = 3
+            ) -> Tuple[float, float, np.ndarray]:
+    """Returns (mean_s, std_s, samples) over `reps` runs — the paper's
+    run-to-run variation methodology (Table II reports mean and std over 50
+    runs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = np.empty(reps)
+    for i in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts[i] = time.perf_counter() - t0
+    return float(ts.mean()), float(ts.std()), ts
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,84 @@
+"""§Roofline report generator: reads the dry-run JSON records and emits the
+per-(arch x shape x mesh) three-term roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.analysis.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, Roofline
+from repro.configs import LM_CONFIGS, SHAPES
+
+
+def load(dryrun_dir: str = "experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec["status"] != "ok":
+            rows.append(rec)
+            continue
+        r = Roofline(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+            chips=rec["chips"],
+            flops_per_device=rec["flops_per_device"],
+            bytes_per_device=rec["bytes_per_device"],
+            collective_bytes_per_device=rec["collective_bytes_per_device"],
+            collectives=rec.get("collectives", {}),
+            peak_bytes_per_device=rec["memory_analysis"].get(
+                "temp_size_in_bytes", 0)
+            + rec["memory_analysis"].get("argument_size_in_bytes", 0),
+            model_flops_global=rec["model_flops"],
+        )
+        rows.append({"status": "ok", "roofline": r, **rec})
+    return rows
+
+
+def table(rows, mesh: str = "pod") -> str:
+    hdr = ("| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | bottleneck "
+           "| MODEL/HLO | roofline-frac | HBM GB |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for rec in rows:
+        if rec["mesh"] != mesh:
+            continue
+        if rec["status"] == "skipped":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if rec["status"] != "ok":
+            lines.append(f"| {rec['arch']} | {rec['shape']} | ERROR: "
+                         f"{rec.get('error','?')[:40]} |")
+            continue
+        r = rec["roofline"]
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.t_compute:.3f} | {r.t_memory:.3f} "
+            f"| {r.t_collective:.3f} | {r.bottleneck} "
+            f"| {r.useful_flops_ratio:.2f} | {r.roofline_fraction:.3f} "
+            f"| {r.peak_bytes_per_device/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"# roofline: {len(ok)} compiled cells, "
+          f"{sum(1 for r in rows if r['status']=='skipped')} skipped")
+    print("\n## single-pod (16x16 = 256 chips)\n")
+    print(table(rows, "pod"))
+    print("\n## multi-pod (2x16x16 = 512 chips)\n")
+    print(table(rows, "multipod"))
+    # the three hillclimb candidates
+    pods = [r["roofline"] for r in ok if r["mesh"] == "pod"]
+    if pods:
+        worst = min(pods, key=lambda r: r.roofline_fraction)
+        coll = max(pods, key=lambda r: r.t_collective
+                   / max(r.step_time_bound, 1e-30))
+        print(f"\nworst roofline fraction: {worst.arch} x {worst.shape} "
+              f"({worst.roofline_fraction:.3f})")
+        print(f"most collective-bound: {coll.arch} x {coll.shape} "
+              f"(t_coll {coll.t_collective:.2f}s)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

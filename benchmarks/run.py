@@ -1,0 +1,56 @@
+"""Benchmark runner — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits a ``name,us_per_call,derived`` CSV summary at the end (harness
+convention) plus the full per-table reports above it."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    reps = 10 if fast else 50
+
+    from . import bench_deconv, bench_dse, bench_resource, bench_sparsity
+
+    print("=" * 72)
+    print("Table II — throughput / run-to-run variation (reverse-loop vs "
+          "zero-insertion)")
+    print("=" * 72)
+    t2 = bench_deconv.main(reps=reps)
+
+    print()
+    print("=" * 72)
+    print("Fig. 5 — design-space exploration")
+    print("=" * 72)
+    bench_dse.main()
+
+    print()
+    print("=" * 72)
+    print("Table I — resource budget at the chosen design point")
+    print("=" * 72)
+    bench_resource.main()
+
+    print()
+    print("=" * 72)
+    print("Fig. 6 — sparsity vs quality (zero-skipping + MMD + Eq. 6)")
+    print("=" * 72)
+    bench_sparsity.main()
+
+    # ---- harness CSV summary ----------------------------------------------
+    print()
+    print("name,us_per_call,derived")
+    for r in t2:
+        if r["layer"].endswith("tpu-model") or r["rl_us"] == 0.0:
+            continue
+        name = f"{r['net']}_{r['layer']}"
+        print(f"{name}_reverse_loop,{r['rl_us']:.1f},"
+              f"gops={r['rl_gops']:.2f};cv={r['rl_cv']:.3f}")
+        print(f"{name}_zero_insertion,{r['zi_us']:.1f},"
+              f"gops={r['zi_gops']:.2f};cv={r['zi_cv']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

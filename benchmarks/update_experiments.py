@@ -1,0 +1,54 @@
+"""Inject the generated roofline tables into EXPERIMENTS.md (between the
+ROOFLINE_TABLE marker and §Perf)."""
+from __future__ import annotations
+
+import re
+
+from . import roofline_report
+
+
+def main():
+    rows = roofline_report.load()
+    ok = [r for r in rows if r["status"] == "ok"]
+    n_skip = sum(1 for r in rows if r["status"] == "skipped")
+    pods = [r["roofline"] for r in ok if r["mesh"] == "pod"]
+    worst = min(pods, key=lambda r: r.roofline_fraction)
+    coll = max(pods, key=lambda r: r.t_collective / max(r.step_time_bound, 1e-30))
+    frac_nonzero = [r for r in pods if r.model_flops_global > 0]
+
+    parts = [
+        f"{len(ok)} compiled cells ({n_skip} documented skips), both meshes.",
+        "",
+        "### single-pod (16×16 = 256 chips)",
+        "",
+        roofline_report.table(rows, "pod"),
+        "",
+        "### multi-pod (2×16×16 = 512 chips)",
+        "",
+        roofline_report.table(rows, "multipod"),
+        "",
+        f"Post-hillclimb extremes (pod): worst roofline fraction "
+        f"{worst.arch} × {worst.shape} ({worst.roofline_fraction:.3f}); "
+        f"most collective-bound {coll.arch} × {coll.shape} "
+        f"(t_coll {coll.t_collective:.2f}s of bound "
+        f"{coll.step_time_bound:.2f}s).",
+        "",
+        "Decode cells show roofline-frac ~0 by construction: one token per",
+        "sequence against a 32k cache is pure cache-bandwidth (the *useful*",
+        "FLOPs are 2·N·B while the bound is reading the cache) — the metric",
+        "that matters there is t_memory, which the int8-KV work (H2) drives.",
+    ]
+    block = "\n".join(parts)
+
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    pattern = re.compile(re.escape(marker) + r".*?(?=\n## §Perf)", re.S)
+    text = pattern.sub(marker + "\n\n" + block + "\n", text)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md updated with", len(ok), "cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Fig. 6 workflow: train -> prune -> measure speedup + MMD -> Eq. 6 peak.
+
+    PYTHONPATH=src python examples/sparsity_sweep.py
+"""
+from benchmarks.bench_sparsity import main
+
+if __name__ == "__main__":
+    main()

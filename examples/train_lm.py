@@ -1,0 +1,16 @@
+"""Train an assigned LM architecture (reduced, family-faithful config) for a
+few hundred steps with the resilient driver — exercises the same code path
+the production launcher uses.
+
+    PYTHONPATH=src python examples/train_lm.py --arch recurrentgemma-2b --steps 50
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "deepseek-7b", "--steps", "50",
+                            "--batch", "4", "--seq", "64"]
+    if "--reduced" not in args:
+        args.append("--reduced")
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.train", *args]))

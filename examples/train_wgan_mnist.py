@@ -1,0 +1,58 @@
+"""End-to-end driver: train the paper's MNIST DCNN with WGAN-GP for a few
+hundred steps on synthetic digits, with async checkpointing, and report the
+MMD quality trajectory.
+
+    PYTHONPATH=src python examples/train_wgan_mnist.py [--steps 200]
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import AsyncCheckpointer
+from repro.core.mmd import mmd
+from repro.data.pipeline import image_source
+from repro.models.dcnn import MNIST_DCNN, generator_apply
+from repro.optim.optimizer import AdamW
+from repro.train.wgan import train_wgan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                             "wgan_mnist_ckpt")
+    cfg = MNIST_DCNN
+    src = image_source("mnist", seed=0, batch=args.batch)
+    ck = AsyncCheckpointer(ckpt_dir, keep=2)
+
+    gp, dp, hist = train_wgan(
+        cfg, src, steps=args.steps, key=jax.random.PRNGKey(0),
+        g_opt=AdamW(lr=2e-4, b1=0.5, b2=0.9),
+        d_opt=AdamW(lr=2e-4, b1=0.5, b2=0.9),
+        n_critic=5, log_every=max(args.steps // 10, 1),
+        ckpt=ck, ckpt_every=max(args.steps // 4, 1))
+    ck.wait()
+
+    for h in hist:
+        print(f"step {h['step']:4d}  d_loss {h['d_loss']:+.4f}  "
+              f"g_loss {h['g_loss']:+.4f}  wdist {h['wdist']:+.4f}  "
+              f"gp {h['gp']:.4f}")
+
+    # quality: MMD between generated samples and held-out synthetic data
+    z = jax.random.normal(jax.random.PRNGKey(7), (64, cfg.z_dim))
+    fake = generator_apply(gp, cfg, z).reshape(64, -1)
+    real = jnp.asarray(src.batch(10_000)["images"][:64]).reshape(64, -1)
+    print(f"\nfinal MMD(fake, real) = {float(mmd(real, fake)):.4f}")
+    print(f"checkpoints in {ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: TPU-native reproduction of "A Competitive Edge" (FPGA DCNN
+inference acceleration) as a multi-pod JAX framework."""
+__version__ = "1.0.0"

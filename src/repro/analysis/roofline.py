@@ -1,0 +1,157 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_global  / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes_global  / (chips * HBM_bw)
+    collective term = collective_bytes  / (chips * link_bw)
+
+`compiled.cost_analysis()` is per-partition (the SPMD module is the
+per-device program), so global = per_device * chips and each term reduces to
+per_device / per-chip-peak.  collective_bytes is parsed from the optimized
+HLO text: we sum the link-crossing bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (ring-model factors).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (x4 links usable per chip for concurrent transfers ~ we use the
+single-link figure, conservative)."""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# matches e.g. bf16[16,512,128]{2,1,0} or f32[]
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, Tuple[int, int]]:
+    """{kind: (op_count, link_bytes)} per device.
+
+    Ring-model link bytes per chip: all-reduce ~ 2x payload, others ~ 1x
+    (the (n-1)/n factor is dropped — negligible at n >= 16)."""
+    out: Dict[str, Tuple[int, int]] = {k: (0, 0) for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-defining collective lines look like:  %name = TYPE[..] kind(...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+(\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        result_part, opname = m.group(1), m.group(2)
+        kind = None
+        for k in _COLL_KINDS:
+            if opname == k or opname.startswith(k + "-"):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if "-start" in opname and kind != "collective-permute":
+            pass  # async start carries the payload; done carries none
+        if opname.endswith("-done"):
+            continue
+        payload = sum(_shape_bytes(d, dims)
+                      for d, dims in _SHAPE_RE.findall(result_part))
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        cnt, tot = out[kind]
+        out[kind] = (cnt + 1, tot + int(payload * factor))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: Dict[str, Tuple[int, int]]
+    peak_bytes_per_device: Optional[float]
+    model_flops_global: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=lambda k: terms[k])
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS_global (catches remat/redundancy waste)."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    @property
+    def step_time_bound(self) -> float:
+        """Roofline step-time lower bound (terms overlap perfectly)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the roofline-bound step: how close the
+        compiled program is to spending all its time on model FLOPs."""
+        useful_t = (self.model_flops_global / self.chips) / PEAK_FLOPS
+        return useful_t / max(self.step_time_bound, 1e-30)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops_global,
+            "hlo_flops_global": self.flops_per_device * self.chips,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_bytes_per_device": self.peak_bytes_per_device,
+            "collectives": {k: v for k, v in self.collectives.items() if v[0]},
+        }
+
+
+def model_flops(cfg, suite) -> float:
+    """MODEL_FLOPS: 6*N*D for training (fwd+bwd), 2*N*D for inference, with
+    N = active params, D = processed tokens."""
+    n = cfg.active_param_count()
+    if suite.kind == "train":
+        d = suite.global_batch * suite.seq_len
+        return 6.0 * n * d
+    if suite.kind == "prefill":
+        d = suite.global_batch * suite.seq_len
+        return 2.0 * n * d
+    d = suite.global_batch * 1  # decode: one token per sequence
+    return 2.0 * n * d

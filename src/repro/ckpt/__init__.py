@@ -1,0 +1,1 @@
+from .checkpoint import save, restore, retain, valid_steps, AsyncCheckpointer

@@ -1,0 +1,72 @@
+"""Assigned input-shape suites and ShapeDtypeStruct input specs.
+
+Every LM arch is paired with 4 shapes (40 cells total):
+  train_4k    : seq 4096,   global_batch 256  -> train_step
+  prefill_32k : seq 32768,  global_batch 32   -> serve prefill
+  decode_32k  : cache 32768, global_batch 128 -> serve_step (1 new token)
+  long_500k   : cache 524288, global_batch 1  -> serve_step; requires
+                sub-quadratic attention (run: recurrentgemma, xlstm;
+                skipped for full-attention archs, see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import ModelConfig, init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSuite:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSuite] = {
+    "train_4k": ShapeSuite("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSuite("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSuite("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSuite("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSuite) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the reason for the skip."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention arch: O(L^2) at 524k; sub-quadratic archs "
+                "only (DESIGN.md §6)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSuite) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        s_tok = s - cfg.frontend_len if cfg.frontend else s
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_tok), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s_tok), i32)
+        if cfg.frontend:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.frontend_dim), cfg.jdtype)
+        return specs
+
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct(
+            (b, s - cfg.frontend_len if cfg.frontend else s), i32)}
+        if cfg.frontend:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.frontend_dim), cfg.jdtype)
+        return specs
+
+    # decode: one new token against a cache of seq_len
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32), "cache": cache}

@@ -1,0 +1,47 @@
+"""Core reproduction of the paper's algorithmic contribution."""
+from .deconv import (
+    deconv2d_algorithm1_numpy,
+    deconv2d_reverse_loop,
+    deconv2d_zero_insertion,
+)
+from .dse import PYNQ_Z2, TPU_V5E, Device, layer_dse, optimize_unified_tile
+from .metric import optimal_sparsity, quality_speed_metric
+from .mmd import median_bandwidth, mmd, mmd2
+from .offsets import make_phase_plan, offset, offset_table, taps_for_phase
+from .sparsity import block_mask, magnitude_prune, prune_tree, zero_skip_stats
+from .tiling import (
+    DeconvGeometry,
+    exact_input_extent,
+    input_tile_extent,
+    legal_tile_factors,
+    out_size,
+)
+
+__all__ = [
+    "deconv2d_algorithm1_numpy",
+    "deconv2d_reverse_loop",
+    "deconv2d_zero_insertion",
+    "Device",
+    "TPU_V5E",
+    "PYNQ_Z2",
+    "layer_dse",
+    "optimize_unified_tile",
+    "optimal_sparsity",
+    "quality_speed_metric",
+    "median_bandwidth",
+    "mmd",
+    "mmd2",
+    "make_phase_plan",
+    "offset",
+    "offset_table",
+    "taps_for_phase",
+    "block_mask",
+    "magnitude_prune",
+    "prune_tree",
+    "zero_skip_stats",
+    "DeconvGeometry",
+    "exact_input_extent",
+    "input_tile_extent",
+    "legal_tile_factors",
+    "out_size",
+]

@@ -1,0 +1,164 @@
+"""Design-space exploration over output tiling factors (paper §V-A, Fig. 5).
+
+Methodology of Zhang et al. [25] as used by the paper: for every *legal*
+tiling factor, compute the computation-to-communication (CTC) ratio and the
+attainable throughput
+
+    attainable(T) = min(peak_ops, CTC(T) * sustainable_bandwidth)
+
+then pick the tiling factor maximizing attainable throughput (solutions left
+of the bandwidth slope are infeasible).  The paper optimizes one *unified*
+T_OH across all layers of a network (the accelerator multiplexes layers);
+we reproduce that and also report the per-layer optimum it sacrifices.
+
+On TPU, VMEM capacity plays BRAM's role and HBM bandwidth plays DDR's; the
+same construction drives our Pallas block-shape choice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .tiling import DeconvGeometry, legal_tile_factors, vmem_footprint
+
+
+@dataclasses.dataclass(frozen=True)
+class Device:
+    name: str
+    peak_ops: float          # ops/s (1 MAC = 2 ops)
+    bandwidth: float         # sustainable external bytes/s
+    onchip_bytes: int        # VMEM / BRAM capacity available to the kernel
+    dtype_bytes: int = 4
+    # on-chip footprint model: our kernel ("full_spatial") vs the paper's
+    # FPGA streaming dataflow ("eq5")
+    footprint_model: str = "full_spatial"
+
+    def __str__(self) -> str:  # pragma: no cover
+        return self.name
+
+
+# TPU v5e chip (target hardware; roofline constants from the task spec).
+TPU_V5E = Device(
+    name="tpu-v5e",
+    peak_ops=197e12,
+    bandwidth=819e9,
+    onchip_bytes=16 * 1024 * 1024,
+    dtype_bytes=2,  # bf16
+)
+
+# The paper's PYNQ-Z2 point design: 16 CUs @ 125 MHz, 1 MAC/cycle/CU,
+# STREAM-measured DDR bandwidth on the PS-PL interface.
+PYNQ_Z2 = Device(
+    name="pynq-z2",
+    peak_ops=16 * 125e6 * 2,
+    bandwidth=2.0e9,
+    onchip_bytes=int(0.6 * 1024 * 1024),  # 140 x 36Kb BRAMs, ~60% usable
+    dtype_bytes=4,  # 32-bit fixed point
+    footprint_model="eq5",  # the FPGA streams Eq.-5 input tiles
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DsePoint:
+    t_oh: int
+    ctc: float                # ops per external byte
+    attainable_ops: float     # ops/s
+    vmem_bytes: int
+    bandwidth_bound: bool
+
+
+def layer_dse(
+    geom: DeconvGeometry,
+    device: Device = TPU_V5E,
+    co_tile: int = 128,
+) -> List[DsePoint]:
+    """All legal (T_OH = T_OW) design points for one layer on one device."""
+    points: List[DsePoint] = []
+    for t in legal_tile_factors(
+        geom, vmem_budget_bytes=device.onchip_bytes,
+        dtype_bytes=device.dtype_bytes, co_tile=co_tile,
+        model=device.footprint_model,
+    ):
+        ctc = _ctc_ratio(geom, t, co_tile, device.dtype_bytes)
+        attainable = min(device.peak_ops, ctc * device.bandwidth)
+        points.append(
+            DsePoint(
+                t_oh=t,
+                ctc=ctc,
+                attainable_ops=attainable,
+                vmem_bytes=vmem_footprint(geom, t, co_tile,
+                                           device.dtype_bytes,
+                                           device.footprint_model),
+                bandwidth_bound=ctc * device.bandwidth < device.peak_ops,
+            )
+        )
+    return points
+
+
+def _ctc_ratio(geom: DeconvGeometry, t_oh: int, co_tile: int,
+               dtype_bytes: int) -> float:
+    """Computation-to-communication ratio for tiling factor t_oh.
+
+    External traffic per tile (paper §III enhancement (3)): one Eq.-5 input
+    block, one weight block, one one-shot output block."""
+    from .tiling import input_tile_extent
+
+    s = geom.stride
+    t_ih = input_tile_extent(t_oh, geom.kernel, s)
+    co_t = min(co_tile, geom.c_out)
+    n_tiles_h = -(-geom.out_h // t_oh)
+    n_tiles_w = -(-geom.out_w // t_oh)
+    n_tiles_co = -(-geom.c_out // co_t)
+    n_tiles = n_tiles_h * n_tiles_w * n_tiles_co
+    in_bytes = t_ih * t_ih * geom.c_in * dtype_bytes
+    w_bytes = geom.kernel ** 2 * geom.c_in * co_t * dtype_bytes
+    out_bytes = t_oh * t_oh * co_t * dtype_bytes
+    total_bytes = n_tiles * (in_bytes + w_bytes + out_bytes)
+    return geom.ops / max(total_bytes, 1)
+
+
+def optimize_unified_tile(
+    geoms: Sequence[DeconvGeometry],
+    device: Device = TPU_V5E,
+    co_tile: int = 128,
+) -> Tuple[int, Dict[int, float]]:
+    """Paper §V-A: one unified T_OH across all layers of a network, chosen to
+    maximize the *network* attainable throughput (total ops / sum of per-layer
+    times).  A layer whose output is smaller than T_OH clamps the tile to its
+    own extent (the paper's MNIST T=12 vs L1's 7x7 output).
+    Returns (optimal T_OH, {T_OH: network attainable ops/s})."""
+    per_layer = [{p.t_oh: p for p in layer_dse(g, device, co_tile)}
+                 for g in geoms]
+    if any(not pts for pts in per_layer):
+        raise ValueError("a layer has no legal tiling factor on this device")
+    candidates = sorted(set().union(*[set(p) for p in per_layer]))
+    scores: Dict[int, float] = {}
+    for t in candidates:
+        total_ops = 0.0
+        total_time = 0.0
+        feasible = True
+        for g, pts in zip(geoms, per_layer):
+            legal = [k for k in pts if k <= t]
+            if not legal:
+                feasible = False
+                break
+            eff = max(legal)  # clamp the unified tile to this layer
+            total_ops += g.ops
+            total_time += g.ops / pts[eff].attainable_ops
+        if feasible:
+            scores[t] = total_ops / total_time
+    best = max(scores, key=lambda t: scores[t])
+    return best, scores
+
+
+def per_layer_optimum(
+    geoms: Sequence[DeconvGeometry],
+    device: Device = TPU_V5E,
+    co_tile: int = 128,
+) -> List[DsePoint]:
+    """What dynamically reconfiguring per layer (paper's future work) buys."""
+    best = []
+    for g in geoms:
+        pts = layer_dse(g, device, co_tile)
+        best.append(max(pts, key=lambda p: p.attainable_ops))
+    return best

@@ -1,0 +1,59 @@
+"""Maximum Mean Discrepancy (paper §V-C) with the Gaussian kernel.
+
+The paper writes k(x,x') = exp(||x-x'||^2); the reproducing-kernel requirement
+(Gretton et al. [9]) needs the negative exponent, and the paper selects "the
+median euclidean distance between ground truth samples as the bandwidth" — we
+implement k(x,x') = exp(-||x-x'||^2 / (2 sigma^2)) with sigma = median pairwise
+distance (the standard median heuristic the paper references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _sq_dists(a: jax.Array, b: jax.Array) -> jax.Array:
+    a2 = jnp.sum(a * a, axis=1)[:, None]
+    b2 = jnp.sum(b * b, axis=1)[None, :]
+    return jnp.maximum(a2 + b2 - 2.0 * (a @ b.T), 0.0)
+
+
+def median_bandwidth(x: jax.Array) -> jax.Array:
+    """Median euclidean distance between ground-truth samples (off-diagonal)."""
+    d2 = _sq_dists(x, x)
+    n = x.shape[0]
+    off = d2[jnp.triu_indices(n, k=1)]
+    return jnp.sqrt(jnp.median(off))
+
+
+def mmd2(
+    x: jax.Array,
+    y: jax.Array,
+    bandwidth: Optional[jax.Array] = None,
+    unbiased: bool = True,
+) -> jax.Array:
+    """Squared MMD between sample sets x ~ P_g (ground truth) and y ~ P_theta.
+
+    x, y: (n, d) / (m, d) flattened samples."""
+    x = x.reshape(x.shape[0], -1).astype(jnp.float32)
+    y = y.reshape(y.shape[0], -1).astype(jnp.float32)
+    sigma = median_bandwidth(x) if bandwidth is None else bandwidth
+    gamma = 1.0 / (2.0 * sigma ** 2 + 1e-12)
+    kxx = jnp.exp(-gamma * _sq_dists(x, x))
+    kyy = jnp.exp(-gamma * _sq_dists(y, y))
+    kxy = jnp.exp(-gamma * _sq_dists(x, y))
+    n, m = x.shape[0], y.shape[0]
+    if unbiased:
+        exx = (kxx.sum() - jnp.trace(kxx)) / (n * (n - 1))
+        eyy = (kyy.sum() - jnp.trace(kyy)) / (m * (m - 1))
+    else:
+        exx = kxx.mean()
+        eyy = kyy.mean()
+    exy = kxy.mean()
+    return exx + eyy - 2.0 * exy
+
+
+def mmd(x: jax.Array, y: jax.Array, bandwidth: Optional[jax.Array] = None) -> jax.Array:
+    """MMD distance (non-negative sqrt of the clipped squared estimate)."""
+    return jnp.sqrt(jnp.maximum(mmd2(x, y, bandwidth), 0.0))

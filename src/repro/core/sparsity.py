@@ -1,0 +1,100 @@
+"""Weight pruning + zero-skipping analysis (paper §V-C, Fig. 6).
+
+Magnitude pruning as in Han et al. [11]; zero-skipping execution-time model
+at element granularity (the FPGA's conditional execution) and at block
+granularity (our TPU adaptation — the MXU executes in lockstep, so skipping
+happens at (C_in-block x C_out-block) slab granularity, statically known at
+weight-load time)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def magnitude_prune(w: jax.Array, sparsity: float) -> Tuple[jax.Array, jax.Array]:
+    """Zero the smallest-|w| fraction ``sparsity`` of entries.  Returns
+    (pruned weights, keep-mask)."""
+    if sparsity <= 0.0:
+        return w, jnp.ones_like(w, dtype=bool)
+    flat = jnp.abs(w).reshape(-1)
+    k = int(np.clip(round(sparsity * flat.size), 0, flat.size))
+    if k == 0:
+        return w, jnp.ones_like(w, dtype=bool)
+    thresh = jnp.sort(flat)[k - 1]
+    mask = jnp.abs(w) > thresh
+    return w * mask, mask
+
+
+def prune_tree(params, sparsity: float, key_filter=lambda path: True):
+    """Magnitude-prune every weight leaf of a pytree (biases excluded by the
+    caller's filter)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    leaves = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if key_filter(name) and leaf.ndim >= 2:
+            leaves.append(magnitude_prune(leaf, sparsity)[0])
+        else:
+            leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class SkipStats:
+    total_macs: int
+    element_macs: int        # MACs under element-level zero-skip (FPGA)
+    block_macs: int          # MACs under block-level zero-skip (TPU, ours)
+    element_speedup: float   # t0 / tp model: total / executed
+    block_speedup: float
+
+
+def zero_skip_stats(
+    w: np.ndarray, block_ci: int = 8, block_co: int = 128
+) -> SkipStats:
+    """Execution-time model of zero-skipping for one (K,K,CI,CO) weight.
+
+    * element level: every zero weight's MAC is skipped (paper's FPGA CUs);
+    * block level: a (block_ci x block_co) slab of a tap is skipped iff it is
+      entirely zero (our static scalar-prefetch skip in deconv2d_sparse).
+    """
+    k1, k2, ci, co = w.shape
+    total = k1 * k2 * ci * co
+    nz = np.asarray(w) != 0.0
+    element = int(nz.sum())
+    n_ci = -(-ci // block_ci)
+    n_co = -(-co // block_co)
+    block = 0
+    for kh in range(k1):
+        for kw in range(k2):
+            for bi in range(n_ci):
+                sl_i = slice(bi * block_ci, min((bi + 1) * block_ci, ci))
+                for bo in range(n_co):
+                    sl_o = slice(bo * block_co, min((bo + 1) * block_co, co))
+                    slab = nz[kh, kw, sl_i, sl_o]
+                    if slab.any():
+                        block += slab.size
+    return SkipStats(
+        total_macs=total,
+        element_macs=element,
+        block_macs=block,
+        element_speedup=total / max(element, 1),
+        block_speedup=total / max(block, 1),
+    )
+
+
+def block_mask(w: np.ndarray, block_ci: int, block_co: int) -> np.ndarray:
+    """(K, K, n_ci_blocks, n_co_blocks) bool — True where the slab has any
+    nonzero (must be computed).  Consumed by kernels/deconv2d_sparse."""
+    k1, k2, ci, co = w.shape
+    n_ci = -(-ci // block_ci)
+    n_co = -(-co // block_co)
+    pad_ci = n_ci * block_ci - ci
+    pad_co = n_co * block_co - co
+    nz = np.pad(np.asarray(w) != 0.0, ((0, 0), (0, 0), (0, pad_ci), (0, pad_co)))
+    nz = nz.reshape(k1, k2, n_ci, block_ci, n_co, block_co)
+    return nz.any(axis=(3, 5))

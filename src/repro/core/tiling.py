@@ -1,0 +1,154 @@
+"""Output-space tile calculus (paper Eq. 5 + legality constraints).
+
+The reverse-loop algorithm tiles the *output* space into disjoint
+``T_OH x T_OW`` blocks (no overlapping-sum problem), and the input tile
+required per output tile has the *constant* extent of Eq. 5:
+
+    T_IH = ceil(T_OH / S) + ceil(K / S)                       (Eq. 5)
+
+independent of the tile position — the property that makes the FPGA CU
+workloads uniform, and that makes our Pallas BlockSpecs static.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+from .offsets import PhasePlan, make_phase_plan
+
+
+def out_size(in_size: int, kernel: int, stride: int, padding: int) -> int:
+    """Transposed-conv output extent (PyTorch ConvTranspose2d convention)."""
+    return (in_size - 1) * stride + kernel - 2 * padding
+
+
+def in_size_for(out_size_: int, kernel: int, stride: int, padding: int) -> int:
+    n = out_size_ - kernel + 2 * padding
+    assert n % stride == 0, "inconsistent deconv geometry"
+    return n // stride + 1
+
+
+def input_tile_extent(t_oh: int, kernel: int, stride: int) -> int:
+    """Paper Eq. 5 (an upper bound on the exact extent; see tests)."""
+    return math.ceil(t_oh / stride) + math.ceil(kernel / stride)
+
+
+def exact_input_extent(
+    t_oh: int, kernel: int, stride: int, padding: int
+) -> int:
+    """Exact max-over-tiles input extent max(i)-min(i)+1 for an S-aligned tile
+    of T_OH output pixels.  Property-tested to be <= Eq. 5's bound."""
+    plan = make_phase_plan(kernel, stride, padding)
+    # rows accessed for tile rows [0, T_OH): i = t + delta, t in [0, ceil(T_OH/S))
+    lo = plan.delta_min
+    hi = (t_oh - 1) // stride + plan.delta_max
+    return hi - lo + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class DeconvGeometry:
+    """Static geometry of one deconv layer."""
+
+    in_h: int
+    in_w: int
+    c_in: int
+    c_out: int
+    kernel: int
+    stride: int
+    padding: int
+
+    @property
+    def out_h(self) -> int:
+        return out_size(self.in_h, self.kernel, self.stride, self.padding)
+
+    @property
+    def out_w(self) -> int:
+        return out_size(self.in_w, self.kernel, self.stride, self.padding)
+
+    @property
+    def macs(self) -> int:
+        """Multiply-accumulates for the full layer (per batch element).
+        Every (input pixel, tap, c_in, c_out) combination is one MAC."""
+        return self.in_h * self.in_w * self.kernel * self.kernel * self.c_in * self.c_out
+
+    @property
+    def ops(self) -> int:
+        """GOps convention of the paper: 2 ops per MAC."""
+        return 2 * self.macs
+
+    def phase_plan(self) -> PhasePlan:
+        return make_phase_plan(self.kernel, self.stride, self.padding)
+
+    def halo_padding(self) -> Tuple[int, int]:
+        """(pad_left, pad_right) applied to the input spatial dims so that
+        every tap access of every S-aligned output tile is in bounds
+        (enhancement (3): all address arithmetic is resolved ahead of the
+        kernel; the device performs only static in-bounds slices)."""
+        plan = self.phase_plan()
+        pad_l = plan.left_halo
+        # Worst-case right access for the last (possibly ragged) tile:
+        # o = out_h - 1 -> t_max = (out_h - 1) // S within its phase, plus halo.
+        i_max = (self.out_h - 1) // self.stride + plan.delta_max
+        pad_r = max(0, i_max - (self.in_h - 1))
+        return pad_l, pad_r
+
+
+def legal_tile_factors(
+    geom: DeconvGeometry,
+    vmem_budget_bytes: int = 12 * 1024 * 1024,
+    dtype_bytes: int = 4,
+    co_tile: int = 128,
+    model: str = "full_spatial",
+) -> List[int]:
+    """Enumerate legal square output tiling factors T_OH = T_OW (the paper
+    explores square tiles).  Legality (the paper's Fig. 5 'legal solutions'):
+
+    * S | T_OH       — tiles are stride-aligned so the phase structure is
+                        identical for every tile (uniform CU workloads);
+    * on-chip fit    — input block + weight block + output block + f32
+                        accumulator fit the budget (VMEM / BRAM).
+
+    `model`: "full_spatial" budgets our Pallas kernel (whole input spatial
+    resident per C_in tile); "eq5" budgets the paper's FPGA dataflow (an
+    Eq.-5 T_IH x T_IW input tile per output tile)."""
+    out: List[int] = []
+    s = geom.stride
+    for t in range(s, geom.out_h + s, s):
+        if t % s:
+            continue
+        t_oh = min(t, geom.out_h)
+        footprint = _vmem_footprint(geom, t_oh, co_tile, dtype_bytes, model)
+        if footprint <= vmem_budget_bytes:
+            out.append(t)
+        if t >= geom.out_h:
+            break
+    return sorted(set(out))
+
+
+def _vmem_footprint(
+    geom: DeconvGeometry, t_oh: int, co_tile: int, dtype_bytes: int,
+    model: str = "full_spatial",
+) -> int:
+    co_t = min(co_tile, geom.c_out)
+    if model == "eq5":
+        # the FPGA dataflow streams Eq.-5 input tiles AND input-channel
+        # blocks (Algorithm 1's i_c loop) through BRAM
+        t_ih = input_tile_extent(t_oh, geom.kernel, geom.stride)
+        in_spatial = t_ih * t_ih
+        ci_t = min(32, geom.c_in)
+    else:
+        pad_l, pad_r = geom.halo_padding()
+        in_spatial = ((geom.in_h + pad_l + pad_r)
+                      * (geom.in_w + pad_l + pad_r))
+        ci_t = geom.c_in
+    x_bytes = in_spatial * ci_t * dtype_bytes
+    w_bytes = geom.kernel * geom.kernel * ci_t * co_t * dtype_bytes
+    y_bytes = t_oh * t_oh * co_t * dtype_bytes
+    acc_bytes = t_oh * t_oh * co_t * 4  # f32 accumulator scratch
+    return x_bytes + w_bytes + y_bytes + acc_bytes
+
+
+def vmem_footprint(geom: DeconvGeometry, t_oh: int, co_tile: int = 128,
+                   dtype_bytes: int = 4, model: str = "full_spatial") -> int:
+    return _vmem_footprint(geom, t_oh, co_tile, dtype_bytes, model)

@@ -1,0 +1,2 @@
+from .pipeline import StepIndexedSource, Prefetcher, image_source, lm_source
+from .synthetic import digit_images, face_images, token_stream

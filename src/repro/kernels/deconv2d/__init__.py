@@ -1,0 +1,4 @@
+from .ops import deconv2d
+from .ref import deconv2d_ref
+
+__all__ = ["deconv2d", "deconv2d_ref"]

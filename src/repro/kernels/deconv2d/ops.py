@@ -1,0 +1,98 @@
+"""Jit'd public wrapper for the deconv2d Pallas kernel.
+
+Resolves geometry (halo padding per core.tiling, channel padding to tile
+multiples), picks DSE-guided default tile factors, invokes the kernel, and
+crops the result.  On non-TPU backends the kernel runs in interpret mode."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.offsets import make_phase_plan
+from ...core.tiling import DeconvGeometry, out_size
+from .kernel import deconv2d_pallas_call
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def default_tiles(oh: int, ow: int, ci: int, co: int, stride: int):
+    """DSE-guided defaults: stride-aligned spatial tiles close to the MXU
+    native 8x128 register shape; full output when small."""
+    t_oh = min(_round_up(oh, stride), _round_up(32, stride))
+    t_ow = min(_round_up(ow, stride), _round_up(32, stride))
+    t_ci = min(ci, 128)
+    t_co = min(co, 128)
+    return t_oh, t_ow, t_ci, t_co
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "stride", "padding", "t_oh", "t_ow", "t_ci", "t_co", "interpret",
+    ),
+)
+def deconv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array],
+    stride: int,
+    padding: int,
+    t_oh: Optional[int] = None,
+    t_ow: Optional[int] = None,
+    t_ci: Optional[int] = None,
+    t_co: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Transposed conv y = deconv(x, w) + b via the reverse-loop kernel.
+
+    x: (N, IH, IW, CI); w: (K, K, CI, CO); b: (CO,) or None.
+    Output: (N, OH, OW, CO), OH = (IH-1)*S + K - 2P.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, ih, iw, ci = x.shape
+    k, _, _, co = w.shape
+    s = stride
+    oh = out_size(ih, k, s, padding)
+    ow = out_size(iw, k, s, padding)
+    plan = make_phase_plan(k, s, padding)
+
+    dt_oh, dt_ow, dt_ci, dt_co = default_tiles(oh, ow, ci, co, s)
+    t_oh = t_oh or dt_oh
+    t_ow = t_ow or dt_ow
+    t_ci = t_ci or dt_ci
+    t_co = t_co or dt_co
+
+    # pad output grid to tile multiples; phase grid rows per padded output
+    ohp = _round_up(oh, t_oh)
+    owp = _round_up(ow, t_ow)
+    n_h_pad = ohp // s
+    n_w_pad = owp // s
+
+    # halo padding (enhancement 3: all address arithmetic resolved up front)
+    pad_l = plan.left_halo
+    pad_rh = max(0, (n_h_pad - 1 + plan.delta_max) - (ih - 1))
+    pad_rw = max(0, (n_w_pad - 1 + plan.delta_max) - (iw - 1))
+    cip = _round_up(ci, t_ci)
+    cop = _round_up(co, t_co)
+    xp = jnp.pad(
+        x, ((0, 0), (pad_l, pad_rh), (pad_l, pad_rw), (0, cip - ci))
+    )
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, cip - ci), (0, cop - co)))
+    bb = b if b is not None else jnp.zeros((co,), dtype=x.dtype)
+    bp = jnp.pad(bb, (0, cop - co)).reshape(1, cop).astype(x.dtype)
+
+    y = deconv2d_pallas_call(
+        xp, wp, bp,
+        plan=plan,
+        ohp=ohp, owp=owp,
+        t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co,
+        pad_l=pad_l,
+        interpret=interpret,
+    )
+    return y[:, :oh, :ow, :co]

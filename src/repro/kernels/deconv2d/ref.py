@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the deconv2d Pallas kernel.
+
+The oracle is the conventional zero-insertion transposed convolution lowered
+through XLA's conv (`core.deconv.deconv2d_zero_insertion`) — an implementation
+entirely independent of the reverse-loop/phase machinery under test."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from ...core.deconv import deconv2d_zero_insertion
+
+
+def deconv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array],
+    stride: int,
+    padding: int,
+) -> jax.Array:
+    """x: (N, IH, IW, CI); w: (K, K, CI, CO); y: (N, OH, OW, CO)."""
+    return deconv2d_zero_insertion(x, w, b, stride, padding)

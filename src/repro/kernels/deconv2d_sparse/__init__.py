@@ -1,0 +1,3 @@
+from .ops import deconv2d_sparse, make_sparse_plan
+
+__all__ = ["deconv2d_sparse", "make_sparse_plan"]

@@ -1,0 +1,104 @@
+"""Jit'd wrapper for the block-sparse zero-skipping deconv kernel.
+
+The sparsity schedule is computed on the host from the (static) pruned
+weights — the paper's zero-skipping, hoisted to compile/load time."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.offsets import make_phase_plan
+from ...core.sparsity import block_mask
+from ...core.tiling import out_size
+from ..deconv2d.ops import default_tiles, _round_up
+from .kernel import build_schedule, deconv2d_sparse_pallas_call
+
+
+def make_sparse_plan(
+    w: np.ndarray, stride: int, padding: int,
+    t_ci: int, t_co: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side schedule from pruned weights (static per network)."""
+    k = w.shape[0]
+    cip = _round_up(w.shape[2], t_ci)
+    cop = _round_up(w.shape[3], t_co)
+    wp = np.pad(np.asarray(w), ((0, 0), (0, 0), (0, cip - w.shape[2]),
+                                (0, cop - w.shape[3])))
+    mask = block_mask(wp, t_ci, t_co)  # (K, K, n_ci, n_co)
+    ci_idx, valid, tap_mask, _ = build_schedule(mask)
+    return ci_idx, valid, tap_mask
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "t_oh", "t_ow", "t_ci", "t_co",
+                     "interpret"),
+)
+def _deconv2d_sparse_jit(
+    x, w, b, ci_idx, valid, tap_mask,
+    stride, padding, t_oh, t_ow, t_ci, t_co, interpret,
+):
+    n, ih, iw, ci = x.shape
+    k, _, _, co = w.shape
+    s = stride
+    oh = out_size(ih, k, s, padding)
+    ow = out_size(iw, k, s, padding)
+    plan = make_phase_plan(k, s, padding)
+    ohp = _round_up(oh, t_oh)
+    owp = _round_up(ow, t_ow)
+    n_h_pad = ohp // s
+    n_w_pad = owp // s
+    pad_l = plan.left_halo
+    pad_rh = max(0, (n_h_pad - 1 + plan.delta_max) - (ih - 1))
+    pad_rw = max(0, (n_w_pad - 1 + plan.delta_max) - (iw - 1))
+    cip = _round_up(ci, t_ci)
+    cop = _round_up(co, t_co)
+    xp = jnp.pad(x, ((0, 0), (pad_l, pad_rh), (pad_l, pad_rw), (0, cip - ci)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, cip - ci), (0, cop - co)))
+    bb = b if b is not None else jnp.zeros((co,), dtype=x.dtype)
+    bp = jnp.pad(bb, (0, cop - co)).reshape(1, cop).astype(x.dtype)
+    y = deconv2d_sparse_pallas_call(
+        xp, wp, bp, ci_idx, valid, tap_mask,
+        plan=plan, ohp=ohp, owp=owp,
+        t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co,
+        pad_l=pad_l, interpret=interpret,
+    )
+    return y[:, :oh, :ow, :co]
+
+
+def deconv2d_sparse(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array],
+    stride: int,
+    padding: int,
+    t_oh: Optional[int] = None,
+    t_ow: Optional[int] = None,
+    t_ci: Optional[int] = None,
+    t_co: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Sparse transposed conv; weights are expected pre-pruned (zeros)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, ih, iw, ci = x.shape
+    k, _, _, co = w.shape
+    oh = out_size(ih, k, stride, padding)
+    ow = out_size(iw, k, stride, padding)
+    dt_oh, dt_ow, dt_ci, dt_co = default_tiles(oh, ow, ci, co, stride)
+    t_oh = t_oh or dt_oh
+    t_ow = t_ow or dt_ow
+    t_ci = t_ci or dt_ci
+    t_co = t_co or dt_co
+    ci_idx, valid, tap_mask = make_sparse_plan(
+        np.asarray(w), stride, padding, t_ci, t_co
+    )
+    return _deconv2d_sparse_jit(
+        x, w, b, jnp.asarray(ci_idx), jnp.asarray(valid),
+        jnp.asarray(tap_mask), stride, padding,
+        t_oh, t_ow, t_ci, t_co, interpret,
+    )

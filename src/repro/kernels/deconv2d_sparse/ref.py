@@ -1,0 +1,3 @@
+"""Oracle for the sparse kernel: the dense oracle applied to pruned weights
+(zero-skipping must not change results, only skip work)."""
+from ..deconv2d.ref import deconv2d_ref as deconv2d_sparse_ref  # noqa: F401

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the pod axis carries
+pure data parallelism by default (one cross-pod gradient all-reduce per
+step) and can alternatively host pipeline stages (dist.pipeline).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for host-device tests (subprocesses set
+    --xla_force_host_platform_device_count accordingly)."""
+    auto = jax.sharding.AxisType.Auto
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(auto,) * 2)

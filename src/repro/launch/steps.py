@@ -1,0 +1,192 @@
+"""Shardings + step functions shared by the dry-run, the trainer, and the
+server.  Everything here works from ShapeDtypeStructs (no allocation)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.shapes import ShapeSuite, input_specs
+from ..dist.context import sharding_context
+from ..dist.sharding import (batch_pspec, cache_specs, make_rules,
+                             spec_to_pspec, tree_shardings)
+from ..models.transformer import ModelConfig, apply_lm, init_cache, init_lm
+from ..optim.optimizer import AdamState, AdamW
+from ..train.lm import lm_loss
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct params tree, logical spec tree) — no allocation."""
+    box = {}
+
+    def fn(key):
+        p, s = init_lm(key, cfg)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(fn, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def opt_state_shapes(params_shapes) -> AdamState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32, params_shapes),
+        nu=jax.tree_util.tree_map(f32, params_shapes),
+    )
+
+
+def opt_shardings(mesh, rules, params_shapes, specs):
+    p_sh = tree_shardings(mesh, rules, params_shapes, specs)
+    return AdamState(
+        step=NamedSharding(mesh, P()),
+        mu=p_sh,
+        nu=p_sh,
+    )
+
+
+def batch_shardings(mesh, rules, batch_specs: Dict[str, jax.ShapeDtypeStruct]):
+    out = {}
+    for k, v in batch_specs.items():
+        if k == "cache":
+            cspecs = None  # handled separately
+            continue
+        out[k] = NamedSharding(
+            mesh, batch_pspec(mesh, rules, v.shape[0], len(v.shape)))
+    return out
+
+
+def cache_shardings(mesh, rules, cfg, cache_shapes):
+    cspecs = cache_specs(cfg)
+    return tree_shardings(mesh, rules, cache_shapes, cspecs)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def make_optimizer(cfg: ModelConfig) -> AdamW:
+    return AdamW(lr=3e-4, weight_decay=0.1, clip_norm=1.0)
+
+
+def default_policy(cfg: ModelConfig) -> str:
+    """FSDP where TP-only optimizer state would blow HBM: >20B dense params,
+    or any MoE (expert-TP shards d_ff only 16-way; Adam moments of 14-42B
+    expert weights need the data axis too).  TP-only elsewhere avoids the
+    per-microbatch FSDP weight all-gather (the dominant collective in the
+    fsdp_tp baseline — §Perf H3)."""
+    if cfg.n_experts > 0 or cfg.param_count() > 20e9:
+        return "fsdp_tp"
+    return "tp"
+
+
+def default_grad_accum(cfg: ModelConfig, suite, mesh: Mesh,
+                       target_tokens_per_device: int = 6144) -> int:
+    """Microbatching so per-device microbatch activations stay HBM-friendly —
+    grads accumulate in f32 across the sequential scan; each microbatch's
+    reduce-scatter overlaps the next microbatch's compute under the
+    latency-hiding scheduler.  ga is a divisor of the per-device batch so
+    the batch-dim sharding survives the microbatch split."""
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    per_dev_batch = max(1, suite.global_batch // dp)
+    per_dev_tokens = per_dev_batch * suite.seq_len
+    divisors = [d for d in range(1, per_dev_batch + 1)
+                if per_dev_batch % d == 0 and suite.global_batch % d == 0]
+    for ga in divisors:  # smallest ga meeting the activation target
+        if per_dev_tokens // ga <= target_tokens_per_device:
+            return ga
+    return divisors[-1]
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, rules,
+                     grad_accum: int = 1):
+    from ..train.lm import make_train_step
+
+    optimizer = make_optimizer(cfg)
+    inner = make_train_step(cfg, optimizer, grad_accum=grad_accum,
+                            compress=False)
+
+    def train_step(params, opt_state, batch):
+        with sharding_context(mesh, rules):
+            params, opt_state, _, met = inner(params, opt_state, None, batch)
+        return params, opt_state, met
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, rules, batch: int,
+                       max_len: int):
+    def prefill_step(params, batch_inputs):
+        with sharding_context(mesh, rules):
+            cache = init_cache(cfg, batch, max_len)
+            logits, cache, _ = apply_lm(
+                params, cfg, batch_inputs["tokens"],
+                batch_inputs.get("frontend_embeds"),
+                mode="prefill", cache=cache)
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, rules):
+    def decode_step(params, cache, tokens):
+        with sharding_context(mesh, rules):
+            logits, cache, _ = apply_lm(params, cfg, tokens,
+                                        mode="decode", cache=cache)
+        return logits[:, -1, :], cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# cell lowering (arch x shape x mesh) -> jax.stages.Lowered
+# ---------------------------------------------------------------------------
+def lower_cell(cfg: ModelConfig, suite: ShapeSuite, mesh: Mesh,
+               policy: str = "auto", donate: bool = True,
+               grad_accum: Optional[int] = None):
+    multi_pod = "pod" in mesh.shape
+    if policy == "auto":
+        policy = default_policy(cfg)
+    rules = make_rules(policy, multi_pod=multi_pod)
+    p_shapes, specs = abstract_params(cfg)
+    p_sh = tree_shardings(mesh, rules, p_shapes, specs)
+    in_specs = input_specs(cfg, suite)
+
+    if suite.kind == "train":
+        if grad_accum is None:
+            grad_accum = default_grad_accum(cfg, suite, mesh)
+        o_shapes = opt_state_shapes(p_shapes)
+        o_sh = opt_shardings(mesh, rules, p_shapes, specs)
+        b_sh = batch_shardings(mesh, rules, in_specs)
+        step = build_train_step(cfg, mesh, rules, grad_accum=grad_accum)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        lowered = jitted.lower(p_shapes, o_shapes, in_specs)
+    elif suite.kind == "prefill":
+        b_sh = batch_shardings(mesh, rules, in_specs)
+        step = build_prefill_step(cfg, mesh, rules, suite.global_batch,
+                                  suite.seq_len)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(p_shapes, in_specs)
+    else:  # decode
+        cache_shapes = in_specs["cache"]
+        c_sh = cache_shardings(mesh, rules, cfg, cache_shapes)
+        tok_sh = NamedSharding(
+            mesh, batch_pspec(mesh, rules, suite.global_batch, 2))
+        step = build_decode_step(cfg, mesh, rules)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, tok_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,) if donate else (),
+        )
+        lowered = jitted.lower(p_shapes, cache_shapes,
+                               in_specs["tokens"])
+    return lowered

@@ -1,0 +1,309 @@
+"""Attention substrate: GQA/MQA/MHA, RoPE variants, blocked (flash-style)
+attention with online softmax, local/global windows, logit softcapping, and
+KV caches (contiguous for global layers, ring-buffer for local layers).
+
+The blocked attention is the memory-bounded pure-JAX formulation (O(S·block)
+live memory) used for both train and serve paths; a Pallas flash kernel can
+replace it transparently (see §Perf in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.context import constrain, current
+from . import nn
+
+NEG_INF = -1e30
+
+
+def _attn_tp_divisible(n_heads: int) -> bool:
+    """True when attention heads split the model axis.  When they don't
+    (minitron 24H, qwen2-vl 28H, musicgen 24H on model=16), sharding the
+    head_dim instead makes every score tile a cross-shard contraction —
+    one all-reduce per (q-block, kv-block, layer): measured 267-398 s of
+    link time per prefill step (§Perf H4).  Replicating attention compute
+    and keeping TP on the FFN/projections costs ~16x attention FLOPs but
+    zero collectives: 4.2 s of compute vs 267 s of links for minitron."""
+    mesh, _ = current()
+    if mesh is None:
+        return True
+    model = mesh.shape.get("model", 1)
+    return n_heads % model == 0
+
+
+# ---------------------------------------------------------------------------
+# RoPE family
+# ---------------------------------------------------------------------------
+def rope_freqs(rotary_dim: int, theta: float) -> jax.Array:
+    i = jnp.arange(0, rotary_dim // 2, dtype=jnp.float32)
+    return theta ** (-2.0 * i / rotary_dim)
+
+
+def apply_rope(
+    x: jax.Array,                 # (B, S, H, Dh)
+    positions: jax.Array,         # (B, S) int32 or (3, B, S) for M-RoPE
+    theta: float = 10000.0,
+    rotary_frac: float = 1.0,     # chatglm3 "2d RoPE": 0.5 (partial rotary)
+    mrope_sections: Optional[Tuple[int, ...]] = None,  # qwen2-vl: (16, 24, 24)
+) -> jax.Array:
+    dh = x.shape[-1]
+    rd = int(dh * rotary_frac)
+    rd -= rd % 2
+    freqs = rope_freqs(rd, theta)                      # (rd/2,)
+    if positions.ndim == 3:
+        # M-RoPE: each frequency band takes its position channel.
+        assert mrope_sections is not None
+        sec_ids = jnp.concatenate([
+            jnp.full((s,), i, dtype=jnp.int32)
+            for i, s in enumerate(mrope_sections)
+        ])  # (rd/2,)
+        pos = positions.astype(jnp.float32)            # (3, B, S)
+        angles = pos[sec_ids, :, :].transpose(1, 2, 0) * freqs  # (B, S, rd/2)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, rd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., : rd // 2], xr[..., rd // 2:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([rot.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Blocked attention with online softmax
+# ---------------------------------------------------------------------------
+def blocked_attention(
+    q: jax.Array,                 # (B, Sq, H, Dh)
+    k: jax.Array,                 # (B, Skv, Hkv, Dh)
+    v: jax.Array,                 # (B, Skv, Hkv, Dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap_val: Optional[float] = None,
+    q_offset: Any = 0,            # int or traced scalar (decode)
+    kv_len: Optional[Any] = None, # valid kv prefix length (decode caches)
+    kv_positions: Optional[jax.Array] = None,  # (Skv,) ring-buffer positions
+    scale: Optional[float] = None,
+    k_scale: Optional[jax.Array] = None,  # (B, Skv, Hkv, 1) int8-KV scales
+    v_scale: Optional[jax.Array] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    kv_len = kv_len if kv_len is not None else skv
+
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    nq = -(-sq // block_q)
+    nk = -(-skv // block_k)
+    sq_p, skv_p = nq * block_q, nk * block_k
+
+    # NO cache-sized transposes: k/v stay in their native (B, Skv, Hkv, Dh)
+    # layout (critical for the 32k decode path — only block-sized copies).
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    quant = k_scale is not None
+    if quant:
+        ksp = jnp.pad(k_scale, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        vsp = jnp.pad(v_scale, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+
+    q_positions = q_offset + jnp.arange(sq_p, dtype=jnp.int32)
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv_p, dtype=jnp.int32)
+    else:
+        kv_positions = jnp.pad(
+            kv_positions, (0, skv_p - skv), constant_values=jnp.iinfo(jnp.int32).max
+        )
+
+    def q_block_step(_, qi):
+        qb = jax.lax.dynamic_slice_in_dim(qp, qi * block_q, block_q, axis=1)
+        qb = qb.reshape(b, block_q, hkv, g, dh).transpose(0, 2, 3, 1, 4)
+        qpos = jax.lax.dynamic_slice_in_dim(q_positions, qi * block_q, block_q)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(kp, ki * block_k, block_k, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, ki * block_k, block_k, axis=1)
+            if quant:  # dequantize-on-read: only the block leaves int8
+                ksb = jax.lax.dynamic_slice_in_dim(ksp, ki * block_k,
+                                                   block_k, axis=1)
+                vsb = jax.lax.dynamic_slice_in_dim(vsp, ki * block_k,
+                                                   block_k, axis=1)
+                kb = kb.astype(ksb.dtype) * ksb
+                vb = vb.astype(vsb.dtype) * vsb
+            kpos = jax.lax.dynamic_slice_in_dim(kv_positions, ki * block_k, block_k)
+            s = jnp.einsum("bhgqd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = nn.softcap(s, softcap_val)
+            mask = (kpos[None, :] < kv_len)
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, block_q), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, block_q), dtype=jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, block_q, dh), dtype=jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(nk), unroll=1
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, blocks = jax.lax.scan(q_block_step, None, jnp.arange(nq))
+    # blocks: (nq, B, Hkv, G, bq, Dh) -> (B, Sq, H, Dh)
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq_p, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (init/apply) with KV cache
+# ---------------------------------------------------------------------------
+def attention_init(
+    key, cfg, dtype, layer_kind: str = "global"
+) -> Tuple[nn.Params, nn.Specs]:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p: nn.Params = {}
+    s: nn.Specs = {}
+    p["wq"], s["wq"] = nn.dense_init(ks[0], d, h * dh, dtype,
+                                     axes=("embed", "heads"), bias=cfg.qkv_bias)
+    p["wk"], s["wk"] = nn.dense_init(ks[1], d, hkv * dh, dtype,
+                                     axes=("embed", "kv_heads"), bias=cfg.qkv_bias)
+    p["wv"], s["wv"] = nn.dense_init(ks[2], d, hkv * dh, dtype,
+                                     axes=("embed", "kv_heads"), bias=cfg.qkv_bias)
+    p["wo"], s["wo"] = nn.dense_init(ks[3], h * dh, d, dtype,
+                                     axes=("heads", "embed"))
+    return p, s
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, layer_kind: str, dtype):
+    """Cache for ONE attention layer.  Local layers use a ring buffer bounded
+    by the attention window (this is what makes long_500k decode O(window)).
+    With cfg.kv_quant, k/v are int8 with per-(token, head) scales."""
+    size = max_len if layer_kind == "global" else min(cfg.local_window, max_len)
+    kv_dtype = jnp.int8 if cfg.kv_quant else dtype
+    cache = {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), kv_dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), kv_dtype),
+        "slot_pos": jnp.full((size,), -1, dtype=jnp.int32),
+    }
+    if cfg.kv_quant:
+        cache["k_scale"] = jnp.zeros((batch, size, cfg.n_kv_heads, 1), dtype)
+        cache["v_scale"] = jnp.zeros((batch, size, cfg.n_kv_heads, 1), dtype)
+    return cache
+
+
+def quantize_kv(x: jax.Array):
+    """(B, S, Hkv, Dh) -> (int8 values, per-(token, head) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(x.dtype)
+
+
+def attention_apply(
+    p: nn.Params,
+    cfg,
+    x: jax.Array,                  # (B, S, D)
+    positions: jax.Array,          # (B, S) or (3, B, S)
+    layer_kind: str = "global",
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_pos: Optional[jax.Array] = None,  # scalar: tokens already cached
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, sq, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = nn.dense(p["wq"], x).reshape(b, sq, h, dh)
+    k = nn.dense(p["wk"], x).reshape(b, sq, hkv, dh)
+    v = nn.dense(p["wv"], x).reshape(b, sq, hkv, dh)
+    if cache is None and not _attn_tp_divisible(h):
+        # train/prefill with q-heads % model != 0: replicate the attention
+        # compute (TP stays on FFN/projections) — see _attn_tp_divisible.
+        q = constrain(q, "batch", None, None, None)
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+    else:
+        # classic GQA-TP: q sharded on heads; kv sharded when divisible,
+        # replicated otherwise (NEVER head_dim-sharded in compute — that
+        # turns every score tile into a cross-shard contraction).
+        q = constrain(q, "batch", None, "heads", None)
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+
+    rope_kwargs = dict(
+        theta=cfg.rope_theta,
+        rotary_frac=cfg.rotary_frac,
+        mrope_sections=cfg.mrope_sections,
+    )
+    if cfg.rope != "none":
+        q = apply_rope(q, positions, **rope_kwargs)
+        k = apply_rope(k, positions, **rope_kwargs)
+
+    window = cfg.local_window if layer_kind == "local" else None
+    scale = cfg.attn_scale if cfg.attn_scale is not None else dh ** -0.5
+
+    if cache is None:
+        out = blocked_attention(
+            q, k, v, causal=True, window=window,
+            softcap_val=cfg.attn_softcap, scale=scale,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        )
+        new_cache = None
+    else:
+        # decode: append S (==1) new tokens into the cache and attend.
+        size = cache["k"].shape[1]
+        slot = cache_pos % size
+        if cfg.kv_quant:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            k_store, v_store = kq, vq
+        else:
+            k_store, v_store = k, v
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_store, slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_store, slot, axis=1)
+        spos = jax.lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"],
+            (cache_pos + jnp.arange(sq, dtype=jnp.int32)), slot, axis=0,
+        )
+        kv_positions = jnp.where(spos < 0, jnp.iinfo(jnp.int32).max, spos)
+        new_cache = {"k": ck, "v": cv, "slot_pos": spos}
+        scales = {}
+        if cfg.kv_quant:
+            new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks, slot, axis=1)
+            new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs, slot, axis=1)
+            scales = {"k_scale": new_cache["k_scale"],
+                      "v_scale": new_cache["v_scale"]}
+        out = blocked_attention(
+            q, ck, cv, causal=True, window=window,
+            softcap_val=cfg.attn_softcap, scale=scale,
+            q_offset=cache_pos,
+            kv_len=cache_pos + sq,
+            kv_positions=kv_positions,
+            block_q=sq, block_k=cfg.attn_block_k,
+            **scales,
+        )
+
+    out = out.reshape(b, sq, h * dh)
+    return nn.dense(p["wo"], out), new_cache

@@ -1,0 +1,163 @@
+"""The paper's DCNN architectures (Fig. 4): WGAN-GP generators for MNIST and
+CelebA plus mirrored CNN critics.
+
+The generator's deconvolution layers run through a selectable backend:
+  * "reverse_loop" — the paper's algorithm, phase-decomposed pure JAX
+                     (differentiable; used for training),
+  * "pallas"       — the reverse-loop Pallas TPU kernel (inference),
+  * "pallas_sparse"— the static zero-skipping kernel (pruned inference),
+  * "xla"          — conventional zero-insertion conv_transpose (the
+                     GPU-style baseline of Table II).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.deconv import deconv2d_reverse_loop, deconv2d_zero_insertion
+from ..core.tiling import DeconvGeometry
+from . import nn
+
+
+@dataclasses.dataclass(frozen=True)
+class DeconvLayerCfg:
+    c_in: int
+    c_out: int
+    kernel: int
+    stride: int
+    padding: int
+    activation: str  # relu | tanh
+
+
+@dataclasses.dataclass(frozen=True)
+class DcnnConfig:
+    name: str
+    z_dim: int
+    img_hw: int
+    img_c: int
+    layers: Tuple[DeconvLayerCfg, ...]
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def geometries(self) -> List[DeconvGeometry]:
+        h = w = 1
+        out = []
+        for l in self.layers:
+            g = DeconvGeometry(h, w, l.c_in, l.c_out, l.kernel, l.stride, l.padding)
+            out.append(g)
+            h, w = g.out_h, g.out_w
+        return out
+
+
+MNIST_DCNN = DcnnConfig(
+    name="dcnn-mnist",
+    z_dim=100,
+    img_hw=28,
+    img_c=1,
+    layers=(
+        DeconvLayerCfg(100, 256, 7, 1, 0, "relu"),   # 1x1 -> 7x7
+        DeconvLayerCfg(256, 128, 4, 2, 1, "relu"),   # 7x7 -> 14x14
+        DeconvLayerCfg(128, 1, 4, 2, 1, "tanh"),     # 14x14 -> 28x28
+    ),
+)
+
+CELEBA_DCNN = DcnnConfig(
+    name="dcnn-celeba",
+    z_dim=100,
+    img_hw=64,
+    img_c=3,
+    layers=(
+        DeconvLayerCfg(100, 1024, 4, 1, 0, "relu"),  # 1x1 -> 4x4
+        DeconvLayerCfg(1024, 512, 4, 2, 1, "relu"),  # 4x4 -> 8x8
+        DeconvLayerCfg(512, 256, 4, 2, 1, "relu"),   # 8x8 -> 16x16
+        DeconvLayerCfg(256, 128, 4, 2, 1, "relu"),   # 16x16 -> 32x32
+        DeconvLayerCfg(128, 3, 4, 2, 1, "tanh"),     # 32x32 -> 64x64
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
+# Generator
+# ---------------------------------------------------------------------------
+def generator_init(key, cfg: DcnnConfig):
+    ks = jax.random.split(key, len(cfg.layers))
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    for i, (k, l) in enumerate(zip(ks, cfg.layers)):
+        kw, kb = jax.random.split(k)
+        fan_in = l.c_in * l.kernel * l.kernel
+        p[f"l{i}"] = {
+            "w": nn.lecun_init(kw, (l.kernel, l.kernel, l.c_in, l.c_out),
+                               cfg.jdtype, fan_in=fan_in),
+            "b": jnp.zeros((l.c_out,), cfg.jdtype),
+        }
+        s[f"l{i}"] = {"w": (None, None, "cin", "cout"), "b": ("cout",)}
+    return p, s
+
+
+def generator_apply(
+    p, cfg: DcnnConfig, z: jax.Array, backend: str = "reverse_loop",
+    tile_overrides: Optional[Dict[int, int]] = None,
+) -> jax.Array:
+    """z: (B, z_dim) -> images (B, H, W, C) in [-1, 1]."""
+    x = z.reshape(z.shape[0], 1, 1, cfg.z_dim).astype(cfg.jdtype)
+    for i, l in enumerate(cfg.layers):
+        w, b = p[f"l{i}"]["w"], p[f"l{i}"]["b"]
+        t = (tile_overrides or {}).get(i)
+        if backend == "reverse_loop":
+            x = deconv2d_reverse_loop(x, w, b, l.stride, l.padding)
+        elif backend == "xla":
+            x = deconv2d_zero_insertion(x, w, b, l.stride, l.padding)
+        elif backend == "pallas":
+            from ..kernels.deconv2d import deconv2d
+            x = deconv2d(x, w, b, l.stride, l.padding, t_oh=t, t_ow=t)
+        elif backend == "pallas_sparse":
+            from ..kernels.deconv2d_sparse import deconv2d_sparse
+            x = deconv2d_sparse(x, w, b, l.stride, l.padding, t_oh=t, t_ow=t)
+        else:
+            raise ValueError(backend)
+        x = jnp.tanh(x) if l.activation == "tanh" else jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Critic (WGAN-GP discriminator: strided convs, LeakyReLU, no norm)
+# ---------------------------------------------------------------------------
+def critic_init(key, cfg: DcnnConfig):
+    chans = [cfg.img_c] + [64 * (2 ** i) for i in range(len(cfg.layers) - 1)]
+    ks = jax.random.split(key, len(chans))
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    hw = cfg.img_hw
+    for i in range(len(chans) - 1):
+        kw, _ = jax.random.split(ks[i])
+        fan_in = chans[i] * 16
+        p[f"c{i}"] = {
+            "w": nn.lecun_init(kw, (4, 4, chans[i], chans[i + 1]), cfg.jdtype,
+                               fan_in=fan_in),
+            "b": jnp.zeros((chans[i + 1],), cfg.jdtype),
+        }
+        s[f"c{i}"] = {"w": (None, None, "cin", "cout"), "b": ("cout",)}
+        hw = hw // 2
+    d_flat = hw * hw * chans[-1]
+    p["head"], s["head"] = nn.dense_init(ks[-1], d_flat, 1, cfg.jdtype,
+                                         (None, None), bias=True)
+    return p, s
+
+
+def critic_apply(p, cfg: DcnnConfig, x: jax.Array) -> jax.Array:
+    n_conv = len([k for k in p if k.startswith("c")])
+    for i in range(n_conv):
+        x = jax.lax.conv_general_dilated(
+            x, p[f"c{i}"]["w"], (2, 2), ((1, 1), (1, 1)),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        ) + p[f"c{i}"]["b"]
+        x = jax.nn.leaky_relu(x, 0.2)
+    x = x.reshape(x.shape[0], -1)
+    return nn.dense(p["head"], x)[:, 0]

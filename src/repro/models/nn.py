@@ -1,0 +1,152 @@
+"""Minimal functional NN substrate (no external framework).
+
+Params are nested dicts of jnp arrays.  Every layer is a pair of functions
+(`init` returning params + logical-axis specs, `apply` pure).  Logical axis
+names are consumed by `repro.dist.sharding` to build NamedShardings.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+Specs = Dict[str, Any]  # mirrors Params; leaves are tuples of logical axes
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def normal_init(key, shape, dtype, scale: float = 0.02):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def lecun_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / math.sqrt(max(fan, 1))
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense
+# ---------------------------------------------------------------------------
+def dense_init(
+    key, d_in: int, d_out: int, dtype,
+    axes: Tuple[Optional[str], Optional[str]] = ("embed", "mlp"),
+    bias: bool = False,
+) -> Tuple[Params, Specs]:
+    kw, kb = jax.random.split(key)
+    p: Params = {"w": lecun_init(kw, (d_in, d_out), dtype)}
+    s: Specs = {"w": axes}
+    if bias:
+        p["b"] = zeros_init(kb, (d_out,), dtype)
+        s["b"] = (axes[1],)
+    return p, s
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(key, d: int, dtype) -> Tuple[Params, Specs]:
+    return {"scale": ones_init(key, (d,), dtype)}, {"scale": ("embed",)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(key, d: int, dtype) -> Tuple[Params, Specs]:
+    return (
+        {"scale": ones_init(key, (d,), dtype), "bias": zeros_init(key, (d,), dtype)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+def embedding_init(key, vocab: int, d: int, dtype) -> Tuple[Params, Specs]:
+    return (
+        {"table": normal_init(key, (vocab, d), dtype)},
+        {"table": ("vocab", "embed")},
+    )
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return p["table"][tokens]
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    return x @ p["table"].T
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# pytree utilities
+# ---------------------------------------------------------------------------
+def tree_size(params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+def tree_bytes(params) -> int:
+    return sum(p.size * p.dtype.itemsize for p in jax.tree_util.tree_leaves(params))
+
+
+def stack_trees(trees: Sequence[Params]) -> Params:
+    """Stack a list of identical pytrees along a new leading 'layers' axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_specs(spec: Specs) -> Specs:
+    """Prefix every leaf spec with the (never-sharded) 'layers' axis."""
+    return jax.tree_util.tree_map(
+        lambda s: ("layers",) + tuple(s),
+        spec,
+        is_leaf=lambda s: isinstance(s, tuple),
+    )

@@ -1,0 +1,378 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (sLSTM/mLSTM).
+
+All recurrences are expressed as `lax.scan` over time with explicit carried
+state, so the same apply function serves training (full sequence), prefill
+(state build-up), and decode (single step with state in/out).  State size is
+O(d) (RG-LRU, sLSTM) or O(d_head^2) (mLSTM) — independent of context length,
+which is what qualifies these archs for the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import nn
+
+CONV_W = 4  # temporal conv width used by both Griffin and xLSTM blocks
+TIME_CHUNK = 256  # remat granularity of the time scans
+
+
+def time_scan(step, carry, xs, chunk: int = TIME_CHUNK):
+    """`lax.scan` over time with chunked rematerialization.
+
+    A plain scan saves every per-step carry for the backward pass — for the
+    mLSTM's (B, H, dh, dh) matrix state that is O(T) x 100s of MB.  Chunking
+    saves the carry only at chunk boundaries (T/chunk snapshots) and
+    recomputes inside the chunk on the backward pass."""
+    leaves = jax.tree_util.tree_leaves(xs)
+    t = leaves[0].shape[0]
+    if t <= chunk:
+        return jax.lax.scan(step, carry, xs)
+    n_full = t // chunk
+
+    def chunk_body(c, xs_c):
+        return jax.lax.scan(step, c, xs_c)
+
+    chunk_body = jax.checkpoint(chunk_body)
+    head = jax.tree_util.tree_map(
+        lambda x: x[: n_full * chunk].reshape(n_full, chunk, *x.shape[1:]), xs)
+    carry, ys_head = jax.lax.scan(chunk_body, carry, head)
+    ys_head = jax.tree_util.tree_map(
+        lambda y: y.reshape(n_full * chunk, *y.shape[2:]), ys_head)
+    if t % chunk:
+        tail = jax.tree_util.tree_map(lambda x: x[n_full * chunk:], xs)
+        carry, ys_tail = jax.lax.scan(step, carry, tail)
+        ys = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), ys_head, ys_tail)
+    else:
+        ys = ys_head
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# temporal conv1d with decode state
+# ---------------------------------------------------------------------------
+def conv1d_init(key, d: int, dtype):
+    p = {"w": nn.lecun_init(key, (CONV_W, d), dtype, fan_in=CONV_W),
+         "b": jnp.zeros((d,), dtype)}
+    s = {"w": (None, "embed"), "b": ("embed",)}
+    return p, s
+
+
+def conv1d_apply(p, x: jax.Array, state: Optional[jax.Array] = None):
+    """Causal depthwise conv.  x: (B,S,D); state: (B, CONV_W-1, D) history."""
+    b, sl, d = x.shape
+    hist = state if state is not None else jnp.zeros((b, CONV_W - 1, d), x.dtype)
+    xx = jnp.concatenate([hist, x], axis=1)
+    y = sum(
+        xx[:, i : i + sl, :] * p["w"][i] for i in range(CONV_W)
+    ) + p["b"]
+    new_state = xx[:, -(CONV_W - 1):, :]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Real-Gated Linear Recurrent Unit) — Griffin eq. (1)-(4)
+# ---------------------------------------------------------------------------
+def rglru_init(key, d: int, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "wa": nn.lecun_init(ks[0], (d, d), dtype),
+        "wx": nn.lecun_init(ks[1], (d, d), dtype),
+        "lam": (8.0 * jax.random.uniform(ks[2], (d,)) + 2.0).astype(jnp.float32),
+    }
+    s = {"wa": ("embed", "embed2"), "wx": ("embed", "embed2"), "lam": ("embed2",)}
+    return p, s
+
+
+def rglru_apply(p, x: jax.Array, h0: Optional[jax.Array] = None):
+    """x: (B,S,D) -> (y (B,S,D), h_final (B,D)).  c = 8 as in Griffin."""
+    b, sl, d = x.shape
+    r = jax.nn.sigmoid(x @ p["wa"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(x @ p["wx"]).astype(jnp.float32)
+    log_a = -8.0 * r * jax.nn.softplus(p["lam"])          # (B,S,D) f32
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bt = beta * gated_x
+
+    h_init = h0.astype(jnp.float32) if h0 is not None else jnp.zeros((b, d), jnp.float32)
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    h_fin, ys = time_scan(
+        step, h_init, (a.transpose(1, 0, 2), bt.transpose(1, 0, 2))
+    )
+    return ys.transpose(1, 0, 2).astype(x.dtype), h_fin
+
+
+def griffin_block_init(key, cfg, dtype):
+    """Griffin recurrent block: gate branch + (conv1d -> RG-LRU) branch."""
+    d = cfg.d_model
+    dr = cfg.rnn_width or d
+    ks = jax.random.split(key, 5)
+    p, s = {}, {}
+    p["in_x"], s["in_x"] = nn.dense_init(ks[0], d, dr, dtype, ("embed", "rnn"))
+    p["in_g"], s["in_g"] = nn.dense_init(ks[1], d, dr, dtype, ("embed", "rnn"))
+    p["conv"], s["conv"] = conv1d_init(ks[2], dr, dtype)
+    s["conv"] = {"w": (None, "rnn"), "b": ("rnn",)}
+    p["rglru"], s["rglru"] = rglru_init(ks[3], dr, dtype)
+    s["rglru"] = {"wa": ("rnn", "rnn2"), "wx": ("rnn", "rnn2"), "lam": ("rnn2",)}
+    p["out"], s["out"] = nn.dense_init(ks[4], dr, d, dtype, ("rnn", "embed"))
+    return p, s
+
+
+def griffin_block_apply(p, cfg, x, state: Optional[Dict] = None):
+    gate = nn.gelu(nn.dense(p["in_g"], x))
+    xr = nn.dense(p["in_x"], x)
+    conv_state = state["conv"] if state is not None else None
+    h0 = state["h"] if state is not None else None
+    xc, new_conv = conv1d_apply(p["conv"], xr, conv_state)
+    y, h_fin = rglru_apply(p["rglru"], xc, h0)
+    out = nn.dense(p["out"], gate * y)
+    new_state = {"conv": new_conv, "h": h_fin}
+    return out, new_state
+
+
+def griffin_state_init(cfg, batch: int, dtype):
+    dr = cfg.rnn_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, CONV_W - 1, dr), dtype),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell)
+#
+# Two equivalent evaluation orders:
+#  * step recurrence (decode, short sequences): O(T) sequential, touches the
+#    (dh x dh) matrix state every step -> O(T·dh²) HBM traffic;
+#  * chunkwise-parallel (train/prefill): within a chunk of L tokens the
+#    output is an L x L masked attention with per-source weights
+#    exp(li_s - g_s - M_t); the state is read/updated once per chunk ->
+#    O(T·dh²/L) HBM traffic.  Exactly the same stabilizer algebra as the
+#    step form (m_t = g_t + max(m0, cummax(li - g))), so both orders agree
+#    to float tolerance (tests/test_mlstm_chunkwise.py).  §Perf H5.
+# ---------------------------------------------------------------------------
+MLSTM_CHUNK = 64
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, c0, n0, m0, chunk: int = MLSTM_CHUNK):
+    """q,k,v: (B,S,H,dh); log_i/log_f: (B,S,H) f32;
+    states: c0 (B,H,dh,dh), n0 (B,H,dh), m0 (B,H).
+    Returns (h (B,S,H,dh) f32, (c1, n1, m1))."""
+    b, s, hh, dh = q.shape
+    nc = s // chunk
+    assert s % chunk == 0
+
+    def resh(x):
+        return (x.reshape(b, nc, chunk, hh, -1)
+                .transpose(1, 0, 3, 2, 4).astype(jnp.float32))
+
+    qc, kc, vc = resh(q), resh(k), resh(v)          # (nc,B,H,L,dh)
+    gi = log_i.reshape(b, nc, chunk, hh).transpose(1, 0, 3, 2)
+    gf = log_f.reshape(b, nc, chunk, hh).transpose(1, 0, 3, 2)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(carry, xs):
+        c0h, n0h, m0_ = carry
+        qb, kb, vb, li, lf = xs
+        g = jnp.cumsum(lf, axis=-1)                  # (B,H,L)
+        a = li - g
+        mc_run = jax.lax.cummax(a, axis=a.ndim - 1)
+        m_t = jnp.maximum(m0_[..., None], mc_run)    # (B,H,L)
+        # intra-chunk: D[t,s] = exp(a_s - M_t), s <= t  (all entries <= 1)
+        d = jnp.where(mask, jnp.exp(a[:, :, None, :] - m_t[..., None]), 0.0)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qb, kb) * d
+        num = jnp.einsum("bhts,bhsd->bhtd", scores, vb)
+        den = scores.sum(axis=-1)                    # (B,H,L)
+        # inter-chunk (initial state)
+        w0 = jnp.exp(m0_[..., None] - m_t)           # (B,H,L)
+        num = num + w0[..., None] * jnp.einsum("bhtk,bhvk->bhtv", qb, c0h)
+        den = den + w0 * jnp.einsum("bhtk,bhk->bht", qb, n0h)
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state: read + write ONCE per chunk
+        mcf = mc_run[..., -1]
+        m1 = g[..., -1] + jnp.maximum(m0_, mcf)
+        sc_old = jnp.exp(m0_ - jnp.maximum(m0_, mcf))
+        w_s = jnp.exp(a - jnp.maximum(m0_, mcf)[..., None])   # (B,H,L)
+        c1 = (sc_old[..., None, None] * c0h
+              + jnp.einsum("bhsv,bhsk->bhvk", vb * w_s[..., None], kb))
+        n1 = sc_old[..., None] * n0h + jnp.einsum("bhs,bhsk->bhk", w_s, kb)
+        return (c1, n1, m1), h
+
+    (c1, n1, m1), hs = jax.lax.scan(
+        chunk_step, (c0, n0, m0), (qc, kc, vc, gi, gf))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, hh, dh)
+    return h, (c1, n1, m1)
+def mlstm_block_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = 2 * d                       # xLSTM proj factor 2
+    h = cfg.n_heads
+    dh = di // h
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["up"], s["up"] = nn.dense_init(ks[0], d, 2 * di, dtype, ("embed", "rnn"))
+    p["conv"], s["conv"] = conv1d_init(ks[1], di, dtype)
+    s["conv"] = {"w": (None, "rnn"), "b": ("rnn",)}
+    # block-diagonal (per-head) q/k/v projections as in the xLSTM paper
+    for nm, kk in (("wq", ks[2]), ("wk", ks[3]), ("wv", ks[4])):
+        p[nm] = {"w": nn.lecun_init(kk, (h, dh, dh), dtype, fan_in=dh)}
+        s[nm] = {"w": ("heads", None, None)}
+    p["wi"], s["wi"] = nn.dense_init(ks[5], di, h, dtype, ("rnn", None))
+    p["wf"], s["wf"] = nn.dense_init(ks[6], di, h, dtype, ("rnn", None))
+    p["down"], s["down"] = nn.dense_init(ks[7], di, d, dtype, ("rnn", "embed"))
+    return p, s
+
+
+def mlstm_state_init(cfg, batch: int, dtype):
+    di = 2 * cfg.d_model
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, CONV_W - 1, di), dtype),
+    }
+
+
+def mlstm_block_apply(p, cfg, x, state: Optional[Dict] = None):
+    b, sl, d = x.shape
+    di = 2 * d
+    hh = cfg.n_heads
+    dh = di // hh
+    up = nn.dense(p["up"], x)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = conv1d_apply(p["conv"], xm, conv_state)
+    xc = nn.silu(xc)
+    # per-head (block-diagonal) projections are tiny (3 H dh^2); contracting
+    # a model-sharded di against replicated weights would all-reduce a
+    # (B,S,H,dh) f32 per projection per block (measured 3.65 TB/step on
+    # train_4k — §Perf H5b).  Replicate the cell, keep TP on up/down.
+    from ..dist.context import constrain
+    xc = constrain(xc, "batch", None, None)
+    xh = xc.reshape(b, sl, hh, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"]["w"])
+    k = jnp.einsum("bshd,hde->bshe", xh, p["wk"]["w"]) * (dh ** -0.5)
+    v = jnp.einsum("bshd,hde->bshe", xh, p["wv"]["w"])
+    log_i = nn.dense(p["wi"], xc).astype(jnp.float32)          # (B,S,H)
+    log_f = -jax.nn.softplus(-nn.dense(p["wf"], xc).astype(jnp.float32))
+
+    if state is not None:
+        c0, n0, m0 = state["C"], state["n"], state["m"]
+    else:
+        c0 = jnp.zeros((b, hh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, hh, dh), jnp.float32)
+        m0 = jnp.full((b, hh), -1e30, jnp.float32)
+
+    if sl % MLSTM_CHUNK == 0 and sl >= 2 * MLSTM_CHUNK:
+        # chunkwise-parallel order (train/prefill): state HBM traffic /chunk
+        h_cw, (c_f, n_f, m_f) = mlstm_chunkwise(
+            q, k, v, log_i, log_f, c0, n0, m0)
+        h_seq = h_cw.reshape(b, sl, di).astype(x.dtype)
+        out = nn.dense(p["down"], h_seq * nn.silu(z))
+        new_state = {"C": c_f, "n": n_f, "m": m_f, "conv": new_conv}
+        return out, new_state
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, li, lf = inp                 # (B,H,dh) x3, (B,H) x2
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)[..., None]
+        ip = jnp.exp(li - m_new)[..., None]
+        kt32, vt32, qt32 = (t.astype(jnp.float32) for t in (kt, vt, qt))
+        c = fp[..., None] * c + ip[..., None] * (vt32[..., :, None] * kt32[..., None, :])
+        n = fp * n + ip * kt32
+        num = jnp.einsum("bhvk,bhk->bhv", c, qt32)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt32)), 1.0)
+        h_t = num / den[..., None]
+        return (c, n, m_new), h_t
+
+    seq = (
+        q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        log_i.transpose(1, 0, 2), log_f.transpose(1, 0, 2),
+    )
+    (c_f, n_f, m_f), ys = time_scan(step, (c0, n0, m0), seq)
+    h_seq = ys.transpose(1, 0, 2, 3).reshape(b, sl, di).astype(x.dtype)
+    out = nn.dense(p["down"], h_seq * nn.silu(z))
+    new_state = {"C": c_f, "n": n_f, "m": m_f, "conv": new_conv}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar cell with hidden-state recurrence)
+# ---------------------------------------------------------------------------
+def slstm_block_init(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["wx"], s["wx"] = nn.dense_init(ks[0], d, 4 * d, dtype, ("embed", "rnn"))
+    # block-diagonal (per-head) recurrent matrices, 4 gates
+    p["r"] = nn.lecun_init(ks[1], (4, h, dh, dh), dtype, fan_in=dh)
+    s["r"] = (None, "heads", None, None)
+    p["out"], s["out"] = nn.dense_init(ks[2], d, d, dtype, ("rnn", "embed"))
+    p["ffn"], s["ffn"] = nn.dense_init(ks[3], d, d, dtype, ("embed", "mlp"))
+    return p, s
+
+
+def slstm_state_init(cfg, batch: int, dtype):
+    h, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}
+
+
+def slstm_block_apply(p, cfg, x, state: Optional[Dict] = None):
+    from ..dist.context import constrain
+
+    b, sl, d = x.shape
+    hh, dh = cfg.n_heads, d // cfg.n_heads
+    gx = nn.dense(p["wx"], x)
+    # replicate the (small, d-wide) recurrent cell: a dh-sharded hidden state
+    # would all-reduce the gate partials EVERY time step (mult 393k on
+    # train_4k — §Perf H5b); TP stays on the in/out projections.
+    gx = constrain(gx, "batch", None, None)
+    gx = gx.reshape(b, sl, 4, hh, dh).astype(jnp.float32)
+
+    if state is not None:
+        c0, n0, h0, m0 = state["c"], state["n"], state["h"], state["m"]
+    else:
+        z = jnp.zeros((b, hh, dh), jnp.float32)
+        c0, n0, h0 = z, z, z
+        m0 = jnp.full((b, hh, dh), -1e30, jnp.float32)
+
+    r = p["r"].astype(jnp.float32)
+
+    def step(carry, g_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,ghde->gbhe", h, r)          # (4,B,H,dh)
+        zi = g_t[:, 0] + rec[0]
+        zf = g_t[:, 1] + rec[1]
+        zz = g_t[:, 2] + rec[2]
+        zo = g_t[:, 3] + rec[3]
+        log_f = -jax.nn.softplus(-zf)                     # log sigmoid
+        m_new = jnp.maximum(log_f + m, zi)
+        ip = jnp.exp(zi - m_new)
+        fp = jnp.exp(log_f + m - m_new)
+        c = fp * c + ip * jnp.tanh(zz)
+        n = fp * n + ip
+        h_new = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, m_new), h_new
+
+    (c_f, n_f, h_f, m_f), ys = time_scan(step, (c0, n0, h0, m0),
+                                         gx.transpose(1, 0, 2, 3, 4))
+    h_seq = ys.transpose(1, 0, 2, 3).reshape(b, sl, d).astype(x.dtype)
+    y = nn.dense(p["out"], h_seq)
+    y = y + nn.gelu(nn.dense(p["ffn"], y))
+    new_state = {"c": c_f, "n": n_f, "h": h_f, "m": m_f}
+    return y, new_state

@@ -1,0 +1,438 @@
+"""Unified LM: one scan-over-layers decoder covering all 10 assigned
+architectures (dense GQA, MoE, local/global alternation, softcaps, M-RoPE,
+Griffin hybrid, xLSTM) plus modality-frontend stubs (vision/audio).
+
+Layers are grouped into repeat *units* (the arch's block pattern); parameters
+are stacked across units and the stack is traversed with `lax.scan`, so HLO
+size and compile time are depth-independent — required for the 512-device
+dry-runs and standard practice at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.context import constrain
+from . import nn
+from .attention import attention_apply, attention_init, init_kv_cache
+from .ffn import ffn_apply, ffn_init, moe_apply, moe_init
+from .recurrent import (
+    griffin_block_apply, griffin_block_init, griffin_state_init,
+    mlstm_block_apply, mlstm_block_init, mlstm_state_init,
+    slstm_block_apply, slstm_block_init, slstm_state_init,
+)
+
+ATTN_KINDS = ("global", "local")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | vlm | audio | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    block_pattern: Tuple[str, ...] = ("global",)
+    activation: str = "swiglu"
+    norm: str = "rmsnorm"
+    norm_eps: float = 1e-6
+    rope: str = "standard"           # standard | 2d | mrope | none
+    rope_theta: float = 10000.0
+    rotary_frac: float = 1.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    attn_scale: Optional[float] = None
+    local_window: int = 4096
+    qkv_bias: bool = False
+    embed_scale: bool = False
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 2
+    expert_d_ff: int = 0
+    n_shared_experts: int = 0
+    moe_norm_topk: bool = True
+    moe_capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    # recurrent
+    rnn_width: int = 0
+    # modality frontend stub
+    frontend: Optional[str] = None   # vision | audio
+    frontend_len: int = 0
+    frontend_dim: int = 0
+    # execution
+    dtype: str = "bfloat16"
+    attn_block_q: int = 512
+    attn_block_k: int = 512
+    remat: bool = True
+    # int8 KV cache (per-token-per-head symmetric scales): halves decode
+    # cache HBM — beyond-paper optimization, see EXPERIMENTS.md §Perf
+    kv_quant: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_units(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def n_rem(self) -> int:
+        return self.n_layers % len(self.block_pattern)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic archs: every block is recurrent or windowed."""
+        return all(k in ("griffin", "mlstm", "slstm", "local")
+                   for k in self.block_pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS in the roofline)."""
+        d, dh = self.d_model, self.head_dim
+        n_attn = sum(1 for k in self.block_pattern if k in ATTN_KINDS)
+        n_grif = sum(1 for k in self.block_pattern if k == "griffin")
+        n_ml = sum(1 for k in self.block_pattern if k == "mlstm")
+        n_sl = sum(1 for k in self.block_pattern if k == "slstm")
+        per_unit = 0
+        per_unit += n_attn * (d * self.n_heads * dh + 2 * d * self.n_kv_heads * dh
+                              + self.n_heads * dh * d)
+        if self.n_experts:
+            per_unit += n_attn * (d * self.n_experts
+                                  + 3 * self.n_experts * d * self.expert_d_ff)
+            if self.n_shared_experts:
+                per_unit += n_attn * 3 * d * self.n_shared_experts * self.expert_d_ff
+        else:
+            mult = 3 if self.activation in ("swiglu", "geglu") else 2
+            per_unit += n_attn * mult * d * self.d_ff
+        dr = self.rnn_width or d
+        per_unit += n_grif * (2 * d * dr + 2 * dr * dr + dr * d
+                              + 3 * d * self.d_ff)
+        di = 2 * d
+        per_unit += n_ml * (d * 2 * di + 3 * di * (di // self.n_heads)
+                            + di * d)
+        per_unit += n_sl * (4 * d * d + 4 * d * (d // self.n_heads) + 2 * d * d)
+        total = self.n_units * per_unit
+        if self.n_rem:
+            total += per_unit * self.n_rem // max(len(self.block_pattern), 1)
+        total += self.vocab_size * d  # tied embeddings
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        routed_all = 3 * self.n_experts * d * self.expert_d_ff
+        routed_act = 3 * self.moe_top_k * d * self.expert_d_ff
+        n_attn_layers = sum(1 for k in self.block_pattern if k in ATTN_KINDS)
+        n_moe = self.n_units * n_attn_layers + self.n_rem
+        return self.param_count() - n_moe * (routed_all - routed_act)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _norm_init(key, cfg):
+    if cfg.norm == "layernorm":
+        return nn.layernorm_init(key, cfg.d_model, cfg.jdtype)
+    return nn.rmsnorm_init(key, cfg.d_model, cfg.jdtype)
+
+
+def _norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return nn.layernorm(p, x, cfg.norm_eps)
+    return nn.rmsnorm(p, x, cfg.norm_eps)
+
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {}
+    s: Dict[str, Any] = {}
+    p["norm1"], s["norm1"] = _norm_init(ks[0], cfg)
+    if kind in ATTN_KINDS:
+        p["attn"], s["attn"] = attention_init(ks[1], cfg, cfg.jdtype, kind)
+        p["norm2"], s["norm2"] = _norm_init(ks[2], cfg)
+        if cfg.n_experts:
+            p["moe"], s["moe"] = moe_init(ks[3], cfg, cfg.jdtype)
+        else:
+            p["ffn"], s["ffn"] = ffn_init(ks[3], cfg.d_model, cfg.d_ff,
+                                          cfg.jdtype, cfg.activation)
+    elif kind == "griffin":
+        p["mixer"], s["mixer"] = griffin_block_init(ks[1], cfg, cfg.jdtype)
+        p["norm2"], s["norm2"] = _norm_init(ks[2], cfg)
+        p["ffn"], s["ffn"] = ffn_init(ks[3], cfg.d_model, cfg.d_ff,
+                                      cfg.jdtype, cfg.activation)
+    elif kind == "mlstm":
+        p["mixer"], s["mixer"] = mlstm_block_init(ks[1], cfg, cfg.jdtype)
+    elif kind == "slstm":
+        p["mixer"], s["mixer"] = slstm_block_init(ks[1], cfg, cfg.jdtype)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    return p, s
+
+
+def apply_block(p, cfg: ModelConfig, kind: str, x, positions, mode,
+                cache, cache_pos):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, p["norm1"], x)
+    if kind in ATTN_KINDS:
+        if mode == "train":
+            out, new_cache = attention_apply(p["attn"], cfg, h, positions, kind)
+        elif mode == "prefill":
+            out, _ = attention_apply(p["attn"], cfg, h, positions, kind)
+            new_cache = _fill_cache(cfg, cache, h, p, positions, kind)
+        else:  # decode
+            out, new_cache = attention_apply(
+                p["attn"], cfg, h, positions, kind, cache, cache_pos
+            )
+        x = x + out
+        h2 = _norm(cfg, p["norm2"], x)
+        if cfg.n_experts:
+            y, aux = moe_apply(p["moe"], cfg, h2,
+                               capacity_factor=cfg.moe_capacity_factor)
+        else:
+            y = ffn_apply(p["ffn"], h2, cfg.activation)
+        x = x + y
+    elif kind == "griffin":
+        out, new_cache = griffin_block_apply(
+            p["mixer"], cfg, h, cache if mode == "decode" else None
+        )
+        if mode == "train":
+            new_cache = None
+        x = x + out
+        h2 = _norm(cfg, p["norm2"], x)
+        x = x + ffn_apply(p["ffn"], h2, cfg.activation)
+    elif kind in ("mlstm", "slstm"):
+        fn = mlstm_block_apply if kind == "mlstm" else slstm_block_apply
+        out, new_cache = fn(p["mixer"], cfg, h,
+                            cache if mode == "decode" else None)
+        if mode == "train":
+            new_cache = None
+        x = x + out
+    return x, new_cache, aux
+
+
+def _fill_cache(cfg, cache, h, p, positions, kind):
+    """Prefill: recompute k/v once more into the cache buffers (cheap linear
+    projections; avoids threading k/v out of attention_apply)."""
+    from .attention import apply_rope
+
+    b, sl, _ = h.shape
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    k = (h @ p["attn"]["wk"]["w"]).reshape(b, sl, hkv, dh)
+    v = (h @ p["attn"]["wv"]["w"]).reshape(b, sl, hkv, dh)
+    if "b" in p["attn"]["wk"]:
+        k = k + p["attn"]["wk"]["b"].reshape(1, 1, hkv, dh)
+        v = v + p["attn"]["wv"]["b"].reshape(1, 1, hkv, dh)
+    if cfg.rope != "none":
+        k = apply_rope(k, positions, theta=cfg.rope_theta,
+                       rotary_frac=cfg.rotary_frac,
+                       mrope_sections=cfg.mrope_sections)
+    scales = {}
+    if cfg.kv_quant:
+        from .attention import quantize_kv
+        k, ks = quantize_kv(k)
+        v, vs = quantize_kv(v)
+    size = cache["k"].shape[1]
+    if sl >= size:
+        ck = k[:, -size:]
+        cv = v[:, -size:]
+        spos = jnp.arange(sl - size, sl, dtype=jnp.int32)
+        if cfg.kv_quant:
+            scales = {"k_scale": ks[:, -size:], "v_scale": vs[:, -size:]}
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+        spos = jnp.where(jnp.arange(size) < sl,
+                         jnp.arange(size, dtype=jnp.int32), -1)
+        if cfg.kv_quant:
+            scales = {
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_scale"], ks, 0, axis=1),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v_scale"], vs, 0, axis=1),
+            }
+    return {"k": ck, "v": cv, "slot_pos": spos, **scales}
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind in ATTN_KINDS:
+        return init_kv_cache(cfg, batch, max_len, kind, cfg.jdtype)
+    if kind == "griffin":
+        return griffin_state_init(cfg, batch, cfg.jdtype)
+    if kind == "mlstm":
+        return mlstm_state_init(cfg, batch, cfg.jdtype)
+    if kind == "slstm":
+        return slstm_state_init(cfg, batch, cfg.jdtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+def init_lm(key, cfg: ModelConfig):
+    """Returns (params, specs) with unit-stacked block params."""
+    ks = jax.random.split(key, cfg.n_units + cfg.n_rem + 3)
+    pattern = cfg.block_pattern
+
+    def init_unit(k):
+        kk = jax.random.split(k, len(pattern))
+        up, us = {}, {}
+        for i, kind in enumerate(pattern):
+            up[f"b{i}"], us[f"b{i}"] = init_block(kk[i], cfg, kind)
+        return up, us
+
+    units = [init_unit(ks[i]) for i in range(cfg.n_units)]
+    unit_params = nn.stack_trees([u[0] for u in units])
+    unit_specs = nn.stack_specs(units[0][1])
+
+    params: Dict[str, Any] = {"units": unit_params}
+    specs: Dict[str, Any] = {"units": unit_specs}
+
+    if cfg.n_rem:
+        rem, rem_s = {}, {}
+        for i in range(cfg.n_rem):
+            kind = pattern[i]
+            rem[f"b{i}"], rem_s[f"b{i}"] = init_block(ks[cfg.n_units + i], cfg, kind)
+        params["rem"] = rem
+        specs["rem"] = rem_s
+
+    params["embed"], specs["embed"] = nn.embedding_init(
+        ks[-3], cfg.vocab_size, cfg.d_model, cfg.jdtype
+    )
+    params["final_norm"], specs["final_norm"] = _norm_init(ks[-2], cfg)
+    if cfg.frontend is not None:
+        params["frontend_proj"], specs["frontend_proj"] = nn.dense_init(
+            ks[-1], cfg.frontend_dim, cfg.d_model, cfg.jdtype, (None, "embed")
+        )
+    return params, specs
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Serving cache pytree: unit-stacked block caches + remainder + pos."""
+    pattern = cfg.block_pattern
+
+    def one_unit():
+        return {f"b{i}": init_block_cache(cfg, kind, batch, max_len)
+                for i, kind in enumerate(pattern)}
+
+    units = nn.stack_trees([one_unit() for _ in range(cfg.n_units)])
+    cache = {"units": units, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.n_rem:
+        cache["rem"] = {f"b{i}": init_block_cache(cfg, pattern[i], batch, max_len)
+                        for i in range(cfg.n_rem)}
+    return cache
+
+
+def default_positions(cfg: ModelConfig, batch: int, start, length: int):
+    """Position ids; (3, B, S) for M-RoPE (text: t=h=w)."""
+    pos = start + jnp.arange(length, dtype=jnp.int32)
+    pos = jnp.broadcast_to(pos, (batch, length))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos, (3, batch, length))
+    return pos
+
+
+def apply_lm(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,                    # (B, S_tok) int32
+    frontend_embeds: Optional[jax.Array] = None,  # (B, L_f, frontend_dim)
+    mode: str = "train",
+    cache: Optional[Dict] = None,
+    positions: Optional[jax.Array] = None,
+):
+    """Returns (logits (B, S_total, V), new_cache, aux_loss)."""
+    b = tokens.shape[0]
+    x = nn.embed(params["embed"], tokens).astype(cfg.jdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.jdtype)
+    if frontend_embeds is not None:
+        fe = nn.dense(params["frontend_proj"], frontend_embeds.astype(cfg.jdtype))
+        x = jnp.concatenate([fe, x], axis=1)
+    s_total = x.shape[1]
+
+    cache_pos = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    if positions is None:
+        start = cache_pos if mode == "decode" else 0
+        positions = default_positions(cfg, b, start, s_total)
+
+    pattern = cfg.block_pattern
+
+    def unit_fn(x, unit_p, unit_c):
+        aux = jnp.zeros((), jnp.float32)
+        new_c = {}
+        x = constrain(x, "batch", None, None)
+        for i, kind in enumerate(pattern):
+            c_i = unit_c[f"b{i}"] if unit_c is not None else None
+            x, nc, a = apply_block(unit_p[f"b{i}"], cfg, kind, x, positions,
+                                   mode, c_i, cache_pos)
+            aux = aux + a
+            if nc is not None:
+                new_c[f"b{i}"] = nc
+        return x, (new_c if new_c else None), aux
+
+    unit_callable = unit_fn
+    if cfg.remat and mode == "train":
+        unit_callable = jax.checkpoint(
+            unit_fn, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(),
+        )
+
+    if mode == "train":
+        def scan_body(carry, unit_p):
+            x, aux = carry
+            x, _, a = unit_callable(x, unit_p, None)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                                   params["units"])
+        new_cache = None
+    else:
+        def scan_body(carry, xs):
+            x, aux = carry
+            unit_p, unit_c = xs
+            x, new_c, a = unit_fn(x, unit_p, unit_c)
+            return (x, aux + a), new_c
+
+        (x, aux), new_units = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)),
+            (params["units"], cache["units"]),
+        )
+        new_cache = {"units": new_units,
+                     "pos": cache_pos + (s_total if mode != "train" else 0)}
+
+    if cfg.n_rem:
+        new_rem = {}
+        for i in range(cfg.n_rem):
+            kind = pattern[i]
+            c_i = cache["rem"][f"b{i}"] if cache is not None else None
+            x, nc, a = apply_block(params["rem"][f"b{i}"], cfg, kind, x,
+                                   positions, mode, c_i, cache_pos)
+            aux = aux + a
+            if nc is not None:
+                new_rem[f"b{i}"] = nc
+        if new_cache is not None:
+            new_cache["rem"] = new_rem
+
+    x = _norm(cfg, params["final_norm"], x)
+    logits = nn.unembed(params["embed"], x)
+    # keep giant logits sharded on vocab (model axis) end-to-end
+    logits = constrain(logits, "batch", None, "vocab")
+    logits = nn.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits, new_cache, aux

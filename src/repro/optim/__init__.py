@@ -1,0 +1,4 @@
+from .optimizer import AdamW, SGD, AdamState, global_norm
+from .schedule import warmup_cosine, constant
+from .compression import (init_error_feedback, compress_grads,
+                          decompress_grads, compression_ratio, EFState)

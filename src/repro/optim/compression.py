@@ -1,0 +1,56 @@
+"""Gradient compression for cross-pod data parallelism.
+
+int8 stochastic-free symmetric quantization with per-leaf scales plus error
+feedback (residual carried to the next step), applied *before* the DP
+all-reduce so inter-pod ICI traffic drops ~4x (bf16->int8 with f32 scales).
+Error feedback keeps convergence (Karimireddy et al. style).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any
+
+
+def init_error_feedback(grads_like) -> EFState:
+    return EFState(residual=jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def quantize_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef: EFState) -> Tuple[Any, Any, EFState]:
+    """Returns (quantized tree, scales tree, new error-feedback state)."""
+    corrected = jax.tree_util.tree_map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, ef.residual)
+    qs = jax.tree_util.tree_map(quantize_leaf, corrected)
+    q = jax.tree_util.tree_map(lambda t: t[0], qs,
+                               is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree_util.tree_map(lambda t: t[1], qs,
+                               is_leaf=lambda t: isinstance(t, tuple))
+    deq = jax.tree_util.tree_map(dequantize_leaf, q, s)
+    new_res = jax.tree_util.tree_map(lambda c, d: c - d, corrected, deq)
+    return q, s, EFState(residual=new_res)
+
+
+def decompress_grads(q, s):
+    return jax.tree_util.tree_map(dequantize_leaf, q, s)
+
+
+def compression_ratio(grads) -> float:
+    raw = sum(g.size * 4 for g in jax.tree_util.tree_leaves(grads))
+    comp = sum(g.size * 1 + 4 for g in jax.tree_util.tree_leaves(grads))
+    return raw / comp

@@ -1,0 +1,99 @@
+"""Optimizers from scratch (no optax): AdamW / Adam / SGD with pytree states,
+f32 master accumulators over possibly-bf16 params, global-norm clipping.
+
+State layout mirrors the param tree so the same sharding specs apply (ZeRO-1
+when the sharding rules put params' data axes on 'data')."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state: AdamState, params) -> Tuple[Any, AdamState]:
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        step = state.step + 1
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    state.mu, grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    state.nu, grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mh = m / c1
+            vh = v / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 1e-2
+    momentum: float = 0.0
+
+    def init(self, params):
+        if self.momentum:
+            return jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+        return ()
+
+    def update(self, grads, state, params):
+        if self.momentum:
+            state = jax.tree_util.tree_map(
+                lambda b, g: self.momentum * b + g.astype(jnp.float32),
+                state, grads)
+            new = jax.tree_util.tree_map(
+                lambda p, b: (p.astype(jnp.float32) - self.lr * b).astype(p.dtype),
+                params, state)
+            return new, state
+        new = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - self.lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))

@@ -1,0 +1,77 @@
+"""Resilient generic training driver: checkpoint/restart, async saves,
+straggler monitoring, deterministic data resume, simulated-failure recovery.
+
+The driver owns no model specifics — it runs any step_fn over any state
+pytree with a StepIndexedSource, which is what makes restart exact: data is
+a pure function of the step index, and the state checkpoint carries the step.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from ..ckpt.checkpoint import AsyncCheckpointer, restore
+from ..dist.fault import StragglerMonitor
+
+
+class TrainDriver:
+    def __init__(
+        self,
+        step_fn: Callable[[Any, Dict], Any],   # (state, batch) -> (state, metrics)
+        source,                                 # StepIndexedSource
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 100,
+        keep: int = 3,
+        straggler_factor: float = 3.0,
+        failure_injector: Optional[Callable[[int], bool]] = None,
+    ):
+        self.step_fn = step_fn
+        self.source = source
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.ckpt = AsyncCheckpointer(ckpt_dir, keep) if ckpt_dir else None
+        self.monitor = StragglerMonitor(factor=straggler_factor)
+        self.failure_injector = failure_injector
+        self.recoveries = 0
+        self.metrics_log = []
+
+    def _maybe_restore(self, state):
+        if not self.ckpt_dir:
+            return state, 0
+        restored, step, _ = restore(self.ckpt_dir, state)
+        if restored is None:
+            return state, 0
+        return restored, step + 1
+
+    def run(self, state, n_steps: int):
+        state, start = self._maybe_restore(state)
+        init_state_template = state
+        step = start
+        while step < n_steps:
+            try:
+                if self.failure_injector and self.failure_injector(step):
+                    raise RuntimeError(f"injected node failure at step {step}")
+                batch = self.source.batch(step)
+                t0 = time.monotonic()
+                state, metrics = self.step_fn(state, batch)
+                jax.block_until_ready(jax.tree_util.tree_leaves(state)[0])
+                dt = time.monotonic() - t0
+                self.monitor.observe(step, dt)
+                self.metrics_log.append(
+                    {"step": step, "time_s": dt,
+                     **{k: float(v) for k, v in metrics.items()}})
+                if self.ckpt and step % self.ckpt_every == 0:
+                    self.ckpt.save(step, state)
+                step += 1
+            except RuntimeError:
+                # node failure: restore last committed checkpoint and resume.
+                self.recoveries += 1
+                if self.ckpt:
+                    self.ckpt.wait()
+                state, step = self._maybe_restore(init_state_template)
+        if self.ckpt:
+            self.ckpt.save(n_steps - 1, state)
+            self.ckpt.wait()
+        return state

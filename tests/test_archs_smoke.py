@@ -1,0 +1,113 @@
+"""Per-assigned-architecture smoke tests: reduced family-faithful config,
+one forward + one train step on CPU, output shapes + no NaNs; decode path
+consistency against full recompute."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import LM_CONFIGS, reduced_config
+from repro.models.transformer import apply_lm, init_cache, init_lm
+from repro.optim.optimizer import AdamW
+from repro.train.lm import make_train_step
+
+ARCHS = sorted(LM_CONFIGS)
+
+
+def _batch(cfg, rng, b=2, s=24):
+    s_tok = s - cfg.frontend_len if cfg.frontend else s
+    out = {
+        "tokens": jnp.array(rng.randint(0, cfg.vocab_size, (b, s_tok))),
+        "labels": jnp.array(rng.randint(0, cfg.vocab_size, (b, s_tok))),
+    }
+    if cfg.frontend:
+        out["frontend_embeds"] = jnp.array(
+            rng.randn(b, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch, rng):
+    cfg = reduced_config(arch)
+    params, specs = init_lm(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, rng)
+    logits, _, aux = apply_lm(params, cfg, batch["tokens"],
+                              batch.get("frontend_embeds"), mode="train")
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab_size
+    assert not bool(jnp.isnan(logits).any())
+
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt))
+    p2, o2, _, met = step(params, opt.init(params), None, batch)
+    assert np.isfinite(float(met["loss"]))
+    # params actually moved
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(p2), jax.tree_util.tree_leaves(params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, rng):
+    cfg = reduced_config(arch)
+    if cfg.n_experts:  # capacity-drop-free for exact decode equivalence
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=16.0)
+    if cfg.kv_quant:   # exact-math check; int8 KV covered by its own test
+        cfg = dataclasses.replace(cfg, kv_quant=False)
+    params, _ = init_lm(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 12
+    batch = _batch(cfg, rng, b, s)
+    toks = batch["tokens"]
+    fe = batch.get("frontend_embeds")
+
+    cache = init_cache(cfg, b, 32)
+    lg_p, cache, _ = apply_lm(params, cfg, toks, fe, mode="prefill",
+                              cache=cache)
+    nxt = jnp.argmax(lg_p[:, -1], -1)[:, None].astype(jnp.int32)
+    lg_d, cache, _ = apply_lm(params, cfg, nxt, None, mode="decode",
+                              cache=cache)
+    toks2 = jnp.concatenate([toks, nxt], axis=1)
+    lg_full, _, _ = apply_lm(params, cfg, toks2, fe, mode="train")
+    np.testing.assert_allclose(
+        np.asarray(lg_d[:, -1]), np.asarray(lg_full[:, -1]),
+        rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "xlstm-1.3b"])
+def test_long_context_state_is_bounded(arch):
+    """The property that qualifies these archs for long_500k: serving state
+    does not grow with context length."""
+    cfg = reduced_config(arch)
+    c1 = init_cache(cfg, 1, 1024)
+    c2 = init_cache(cfg, 1, 65536)
+    n1 = sum(x.size for x in jax.tree_util.tree_leaves(c1))
+    n2 = sum(x.size for x in jax.tree_util.tree_leaves(c2))
+    assert n2 == n1  # ring buffers bounded by window; recurrent state fixed
+
+
+def test_full_attention_cache_grows():
+    cfg = reduced_config("deepseek-7b")
+    n1 = sum(x.size for x in jax.tree_util.tree_leaves(init_cache(cfg, 1, 64)))
+    n2 = sum(x.size for x in jax.tree_util.tree_leaves(init_cache(cfg, 1, 128)))
+    assert n2 > 1.5 * n1
+
+
+def test_int8_kv_cache_decode(rng):
+    """int8 KV cache (beyond-paper serving optimization): decode must track
+    the full-recompute logits within quantization tolerance."""
+    import dataclasses
+    cfg = dataclasses.replace(reduced_config("deepseek-7b"), kv_quant=True)
+    params, _ = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jnp.array(rng.randint(0, cfg.vocab_size, (2, 12)))
+    cache = init_cache(cfg, 2, 32)
+    lg_p, cache, _ = apply_lm(params, cfg, toks, mode="prefill", cache=cache)
+    nxt = jnp.argmax(lg_p[:, -1], -1)[:, None].astype(jnp.int32)
+    lg_d, cache, _ = apply_lm(params, cfg, nxt, mode="decode", cache=cache)
+    toks2 = jnp.concatenate([toks, nxt], axis=1)
+    lg_full, _, _ = apply_lm(params, cfg, toks2, mode="train")
+    rel = (float(jnp.abs(lg_d[:, -1] - lg_full[:, -1]).max())
+           / float(jnp.abs(lg_full[:, -1]).max()))
+    assert rel < 0.05
+    # the cache really is int8
+    assert cache["units"]["b0"]["k"].dtype == jnp.int8

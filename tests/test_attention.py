@@ -1,0 +1,87 @@
+"""blocked_attention vs a naive full-softmax oracle: causal, windowed, GQA,
+decode-style offsets, softcap."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import apply_rope, blocked_attention
+
+
+def naive_attention(q, k, v, causal=True, window=None, softcap=None,
+                    scale=None):
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(s, bool)
+    if causal:
+        mask &= (kpos <= qpos)[None, None]
+    if window:
+        mask &= (kpos > qpos - window)[None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vv).astype(q.dtype)
+
+
+CASES = [
+    dict(sq=32, skv=32, h=4, hkv=4, dh=8, causal=True, window=None, sc=None),
+    dict(sq=33, skv=33, h=4, hkv=2, dh=8, causal=True, window=None, sc=None),
+    dict(sq=48, skv=48, h=8, hkv=1, dh=16, causal=True, window=8, sc=None),
+    dict(sq=40, skv=40, h=4, hkv=4, dh=8, causal=True, window=None, sc=30.0),
+]
+
+
+@pytest.mark.parametrize("c", CASES)
+def test_blocked_matches_naive(c, rng):
+    q = jnp.array(rng.randn(2, c["sq"], c["h"], c["dh"]), jnp.float32)
+    k = jnp.array(rng.randn(2, c["skv"], c["hkv"], c["dh"]), jnp.float32)
+    v = jnp.array(rng.randn(2, c["skv"], c["hkv"], c["dh"]), jnp.float32)
+    out = blocked_attention(q, k, v, causal=c["causal"], window=c["window"],
+                            softcap_val=c["sc"], block_q=16, block_k=16)
+    ref = naive_attention(q, k, v, c["causal"], c["window"], c["sc"])
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_block_size_invariance(rng):
+    q = jnp.array(rng.randn(1, 64, 4, 8), jnp.float32)
+    k = jnp.array(rng.randn(1, 64, 2, 8), jnp.float32)
+    v = jnp.array(rng.randn(1, 64, 2, 8), jnp.float32)
+    outs = [blocked_attention(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in ((8, 8), (16, 64), (64, 16), (64, 64))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=2e-4)
+
+
+def test_rope_properties(rng):
+    """RoPE preserves norms and is relative: scores depend on pos deltas."""
+    x = jnp.array(rng.randn(1, 8, 2, 16), jnp.float32)
+    pos = jnp.arange(8)[None, :]
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1),
+        rtol=1e-5, atol=1e-5)
+    # shifting all positions leaves q·k scores unchanged
+    q = jnp.array(rng.randn(1, 8, 2, 16), jnp.float32)
+    k = jnp.array(rng.randn(1, 8, 2, 16), jnp.float32)
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", apply_rope(q, pos), apply_rope(k, pos))
+    s2 = jnp.einsum("bqhd,bkhd->bhqk", apply_rope(q, pos + 100),
+                    apply_rope(k, pos + 100))
+    np.testing.assert_allclose(s1, s2, rtol=1e-3, atol=1e-3)
+
+
+def test_mrope_text_equals_standard(rng):
+    """M-RoPE with t=h=w positions (text) must equal standard RoPE."""
+    x = jnp.array(rng.randn(1, 8, 2, 16), jnp.float32)
+    pos = jnp.arange(8)[None, :]
+    pos3 = jnp.broadcast_to(pos, (3, 1, 8))
+    y1 = apply_rope(x, pos)
+    y2 = apply_rope(x, pos3, mrope_sections=(4, 2, 2))
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,74 @@
+"""Fault tolerance: failure-injected training recovery, stragglers,
+heartbeats, elastic meshes."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import lm_source
+from repro.dist.fault import Heartbeat, StragglerMonitor, elastic_mesh
+from repro.train.loop import TrainDriver
+
+
+def test_driver_recovers_from_injected_failure(tmp_path):
+    """Kill the 'node' at step 7; driver must restore the step-5 checkpoint
+    and converge to the same final state as an uninterrupted run
+    (deterministic data => exact resume)."""
+    src = lm_source(seed=0, batch=2, seq_len=8, vocab=64)
+
+    def make_step():
+        @jax.jit
+        def f(state, tokens):
+            # toy "training": state accumulates a function of (step data)
+            return state + jnp.sum(tokens) % 97, {"loss": jnp.sum(tokens)}
+        return lambda st, b: f(st, jnp.asarray(b["tokens"]))
+
+    failed = {"done": False}
+
+    def injector(step):
+        if step == 7 and not failed["done"]:
+            failed["done"] = True
+            return True
+        return False
+
+    d1 = TrainDriver(make_step(), src, ckpt_dir=str(tmp_path / "a"),
+                     ckpt_every=5, failure_injector=injector)
+    s_fail = d1.run(jnp.zeros((), jnp.int64), 10)
+    assert d1.recoveries == 1
+
+    d2 = TrainDriver(make_step(), src, ckpt_dir=str(tmp_path / "b"),
+                     ckpt_every=5)
+    s_clean = d2.run(jnp.zeros((), jnp.int64), 10)
+    assert int(s_fail) == int(s_clean)
+
+
+def test_straggler_monitor_flags_slow_steps():
+    m = StragglerMonitor(factor=3.0, warmup_steps=2)
+    for i in range(10):
+        m.observe(i, 0.1)
+    assert m.observe(10, 0.5) is True
+    assert m.flagged == [10]
+    # straggler must not poison the EMA
+    assert m.ema < 0.12
+    assert m.observe(11, 0.1) is False
+
+
+def test_heartbeat_fires_on_silence():
+    fired = []
+    hb = Heartbeat(timeout_s=0.2, on_failure=lambda: fired.append(1))
+    try:
+        for _ in range(3):
+            hb.tick()
+            time.sleep(0.05)
+        assert not fired
+        time.sleep(0.5)
+        assert fired == [1]
+    finally:
+        hb.close()
+
+
+def test_elastic_mesh_scale_down():
+    devs = jax.devices()  # single CPU device in tests
+    m = elastic_mesh(devs, model_parallel=1)
+    assert m.shape == {"data": 1, "model": 1}

@@ -1,0 +1,74 @@
+"""Trip-count-aware HLO analyzer: exactness on known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.hlo import analyze
+from repro.analysis.roofline import Roofline
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_flops_no_loop():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    c = jax.ShapeDtypeStruct((512, 64), jnp.float32)
+    res = analyze(_compile(lambda a, b, c: (a @ b) @ c, a, b, c).as_text())
+    assert res.flops == 2 * 128 * 256 * 512 + 2 * 128 * 512 * 64
+
+
+def test_flops_scan_multiplied():
+    def g(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=37)
+        return y
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    res = analyze(_compile(g, x, w).as_text())
+    assert res.flops == 37 * 2 * 64 ** 3
+    assert res.n_while >= 1
+
+
+def test_flops_nested_scan():
+    def h(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ w), None
+            ci, _ = jax.lax.scan(inner, c, None, length=5)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=7)
+        return y
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    res = analyze(_compile(h, x, w).as_text())
+    assert res.flops == 35 * 2 * 64 ** 3
+
+
+def test_bytes_model_order_of_magnitude():
+    """Traffic model within 3x of the obvious analytic value for a simple
+    streaming op chain."""
+    def f(x):
+        return jnp.tanh(x) * 2.0 + 1.0
+    x = jax.ShapeDtypeStruct((1 << 20,), jnp.float32)
+    res = analyze(_compile(f, x).as_text())
+    analytic = 2 * (1 << 20) * 4  # read + write once (fused)
+    assert analytic / 3 <= res.bytes_accessed <= analytic * 3
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(
+        arch="a", shape="s", mesh="pod", chips=256,
+        flops_per_device=1.97e14, bytes_per_device=819e9 * 2,
+        collective_bytes_per_device=50e9 * 0.5,
+        collectives={}, peak_bytes_per_device=1e9,
+        model_flops_global=1.97e14 * 256 * 0.5,
+    )
+    assert r.t_compute == 1.0
+    assert r.t_memory == 2.0
+    assert r.t_collective == 0.5
+    assert r.bottleneck == "memory"
+    assert r.useful_flops_ratio == 0.5
+    assert r.roofline_fraction == 0.25  # 0.5 useful / 2.0 bound

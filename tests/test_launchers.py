@@ -1,0 +1,27 @@
+"""Launcher entry points run end-to-end (subprocess)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def test_train_launcher_reduced(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "chatglm3-6b",
+         "--reduced", "--steps", "4", "--batch", "2", "--seq", "32",
+         "--ckpt-dir", str(tmp_path)],
+        capture_output=True, text=True, timeout=600, env=ENV, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "done: 4 steps" in proc.stdout
+
+
+def test_train_launcher_with_compression(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "deepseek-7b",
+         "--reduced", "--steps", "3", "--batch", "2", "--seq", "16",
+         "--grad-accum", "2", "--compress-grads"],
+        capture_output=True, text=True, timeout=600, env=ENV, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "done: 3 steps" in proc.stdout

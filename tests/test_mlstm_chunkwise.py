@@ -1,0 +1,67 @@
+"""Chunkwise-parallel mLSTM == step recurrence (the §Perf H5 optimization
+must be numerically equivalent, not an approximation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.recurrent import mlstm_chunkwise
+
+
+def _step_reference(q, k, v, log_i, log_f, c0, n0, m0):
+    b, s, hh, dh = q.shape
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)[..., None]
+        ip = jnp.exp(li - m_new)[..., None]
+        c = fp[..., None] * c + ip[..., None] * (vt[..., :, None] * kt[..., None, :])
+        n = fp * n + ip * kt
+        num = jnp.einsum("bhvk,bhk->bhv", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        return (c, n, m_new), num / den[..., None]
+    seq = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32) for t in (q, k, v)) + (
+        log_i.transpose(1, 0, 2), log_f.transpose(1, 0, 2))
+    (c, n, m), ys = jax.lax.scan(step, (c0, n0, m0), seq)
+    return ys.transpose(1, 0, 2, 3), (c, n, m)
+
+
+def test_chunkwise_equals_step():
+    rng = np.random.RandomState(0)
+    b, s, hh, dh = 2, 256, 2, 16
+    q = jnp.array(rng.randn(b, s, hh, dh), jnp.float32)
+    k = jnp.array(rng.randn(b, s, hh, dh), jnp.float32) * dh ** -0.5
+    v = jnp.array(rng.randn(b, s, hh, dh), jnp.float32)
+    li = jnp.array(rng.randn(b, s, hh), jnp.float32)
+    lf = jnp.array(-np.abs(rng.randn(b, s, hh)), jnp.float32)
+    c0 = jnp.zeros((b, hh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, hh, dh), jnp.float32)
+    m0 = jnp.full((b, hh), -1e30, jnp.float32)
+    h_cw, (c1, n1, m1) = mlstm_chunkwise(q, k, v, li, lf, c0, n0, m0, chunk=64)
+    h_st, (c2, n2, m2) = _step_reference(q, k, v, li, lf, c0, n0, m0)
+    np.testing.assert_allclose(h_cw, h_st, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(n1, n2, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(c1, c2, rtol=2e-4, atol=2e-4)
+
+
+def test_chunkwise_with_initial_state():
+    """Chunk boundary must compose: running two halves == one pass."""
+    rng = np.random.RandomState(1)
+    b, s, hh, dh = 1, 256, 2, 8
+    mk = lambda *sh: jnp.array(rng.randn(*sh), jnp.float32)
+    q, k, v = mk(b, s, hh, dh), mk(b, s, hh, dh), mk(b, s, hh, dh)
+    li, lf = mk(b, s, hh), -jnp.abs(mk(b, s, hh))
+    c0 = jnp.zeros((b, hh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, hh, dh), jnp.float32)
+    m0 = jnp.full((b, hh), -1e30, jnp.float32)
+    h_full, st_full = mlstm_chunkwise(q, k, v, li, lf, c0, n0, m0, chunk=64)
+    half = s // 2
+    h1, st1 = mlstm_chunkwise(q[:, :half], k[:, :half], v[:, :half],
+                              li[:, :half], lf[:, :half], c0, n0, m0, chunk=64)
+    h2, st2 = mlstm_chunkwise(q[:, half:], k[:, half:], v[:, half:],
+                              li[:, half:], lf[:, half:], *st1, chunk=64)
+    np.testing.assert_allclose(jnp.concatenate([h1, h2], 1), h_full,
+                               rtol=2e-4, atol=2e-4)
+    for a, bb in zip(st2, st_full):
+        np.testing.assert_allclose(a, bb, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,49 @@
+"""Eq. 5 tile calculus properties."""
+from hypothesis import given, strategies as st
+
+from repro.core.tiling import (
+    DeconvGeometry, exact_input_extent, in_size_for, input_tile_extent,
+    legal_tile_factors, out_size, vmem_footprint,
+)
+
+geom = st.tuples(
+    st.integers(1, 8),    # K
+    st.integers(1, 4),    # S
+    st.integers(0, 5),    # P
+    st.integers(1, 16),   # T_OH multiplier
+)
+
+
+@given(geom)
+def test_eq5_bounds_exact_extent(g):
+    k, s, p, tm = g
+    if p >= k:  # degenerate geometry (output smaller than padding)
+        return
+    t_oh = tm * s  # stride-aligned tiles, as in the kernel
+    exact = exact_input_extent(t_oh, k, s, p)
+    bound = input_tile_extent(t_oh, k, s)
+    assert exact <= bound + 1  # Eq. 5 (+1 covers the P=0 corner the paper
+    #                            absorbs into its ceil; see core/tiling.py)
+
+
+@given(st.integers(1, 32), st.integers(1, 8), st.integers(1, 4))
+def test_out_in_roundtrip(i, k, s):
+    p = min(k - 1, 1)
+    o = out_size(i, k, s, p)
+    assert in_size_for(o, k, s, p) == i
+
+
+def test_legal_tiles_stride_aligned():
+    g = DeconvGeometry(7, 7, 256, 128, 4, 2, 1)
+    tiles = legal_tile_factors(g)
+    assert tiles, "some tile must be legal"
+    assert all(t % g.stride == 0 for t in tiles)
+    for t in tiles:
+        assert vmem_footprint(g, t) <= 12 * 1024 * 1024
+
+
+def test_macs_and_ops():
+    g = DeconvGeometry(7, 7, 256, 128, 4, 2, 1)
+    assert g.ops == 2 * g.macs
+    assert g.macs == 7 * 7 * 4 * 4 * 256 * 128
+    assert g.out_h == 14
