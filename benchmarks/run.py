@@ -1,7 +1,9 @@
 """Benchmark runner — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--smoke]
 
+``--smoke`` runs only the deconv traffic + autotune comparison with tiny
+rep counts and emits BENCH_deconv.json (the CI perf-trajectory artifact).
 Emits a ``name,us_per_call,derived`` CSV summary at the end (harness
 convention) plus the full per-table reports above it."""
 from __future__ import annotations
@@ -11,9 +13,18 @@ import sys
 
 def main() -> None:
     fast = "--fast" in sys.argv
+    smoke = "--smoke" in sys.argv
     reps = 10 if fast else 50
 
     from . import bench_deconv, bench_dse, bench_resource, bench_sparsity
+
+    if smoke:
+        print("=" * 72)
+        print("Smoke: deconv HBM traffic (modeled vs measured) + autotuned "
+              "vs fixed tiles")
+        print("=" * 72)
+        bench_deconv.main(smoke=True)
+        return
 
     print("=" * 72)
     print("Table II — throughput / run-to-run variation (reverse-loop vs "

@@ -142,7 +142,14 @@ def _operand_names(op: Op) -> List[str]:
             if depth == 0:
                 end = i
                 break
-    return _OPERAND_RE.findall(op.rest[:end])
+    seg = op.rest[:end]
+    # newer XLA dumps print typed operands ("f32[128,256]{1,0} %arg.1");
+    # when %-prefixed names are present, take exactly those — the loose
+    # fallback would otherwise pick up dtype/shape tokens as operands.
+    prefixed = re.findall(r"%([\w.\-]+)", seg)
+    if prefixed:
+        return prefixed
+    return _OPERAND_RE.findall(seg)
 
 
 def compute_multipliers(
@@ -307,6 +314,48 @@ class HloCost:
     collective_bytes: float            # link bytes, ring model
     collectives: Dict[str, Tuple[int, float]]
     n_while: int
+
+
+# ---------------------------------------------------------------------------
+# deconv HBM-traffic accounting (modeled vs measured)
+# ---------------------------------------------------------------------------
+def deconv_traffic_report(geom, t_oh: int, t_ow: int, t_ci: int, t_co: int,
+                          dtype_bytes: int = 4) -> Dict[str, float]:
+    """Modeled HBM bytes of one deconv layer (per batch element) under the
+    halo-streaming kernel vs the legacy full-image pipeline (which
+    re-streamed the whole padded input per grid program).
+
+    ``in_bytes_per_tile`` is the Eq. 5 window — constant per tile and
+    independent of image size; ``traffic_reduction`` is the tentpole win.
+    """
+    from ..core.tiling import deconv_traffic, full_image_traffic
+
+    t = deconv_traffic(geom, t_oh, t_ow, t_ci, t_co, dtype_bytes)
+    full = full_image_traffic(geom, t_oh, t_ow, t_ci, t_co, dtype_bytes)
+    return {
+        "n_tiles": t.n_tiles,
+        "n_ci_steps": t.n_ci_steps,
+        "in_bytes_per_tile": t.in_bytes_per_tile,
+        "w_bytes_per_tile": t.w_bytes_per_tile,
+        "out_bytes_per_tile": t.out_bytes_per_tile,
+        "halo_total_bytes": t.total_bytes,
+        "full_image_in_bytes_per_tile": full.in_bytes_per_tile,
+        "full_image_total_bytes": full.total_bytes,
+        "traffic_reduction": full.total_bytes / max(t.total_bytes, 1),
+    }
+
+
+def measured_bytes(fn, *args) -> float:
+    """`bytes_accessed` of the optimized HLO of ``jit(fn)(*args)``.
+
+    On TPU the Pallas kernel appears as one custom-call whose operand +
+    result bytes are the arrays crossing HBM; on CPU (interpret mode) the
+    kernel is inlined into plain HLO, so the number is an upper-bound proxy
+    — benchmarks label it accordingly."""
+    import jax
+
+    compiled = jax.jit(fn).lower(*args).compile()
+    return analyze(compiled.as_text()).bytes_accessed
 
 
 def analyze(hlo: str) -> HloCost:

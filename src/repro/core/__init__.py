@@ -4,15 +4,20 @@ from .deconv import (
     deconv2d_reverse_loop,
     deconv2d_zero_insertion,
 )
-from .dse import PYNQ_Z2, TPU_V5E, Device, layer_dse, optimize_unified_tile
+from .dse import (PYNQ_Z2, TPU_V5E, Device, layer_dse, optimize_unified_tile,
+                  tile_attainable)
 from .metric import optimal_sparsity, quality_speed_metric
 from .mmd import median_bandwidth, mmd, mmd2
 from .offsets import make_phase_plan, offset, offset_table, taps_for_phase
 from .sparsity import block_mask, magnitude_prune, prune_tree, zero_skip_stats
 from .tiling import (
     DeconvGeometry,
+    deconv_traffic,
     exact_input_extent,
+    full_image_traffic,
+    halo_tile,
     input_tile_extent,
+    kernel_vmem_bytes,
     legal_tile_factors,
     out_size,
 )
@@ -39,9 +44,14 @@ __all__ = [
     "magnitude_prune",
     "prune_tree",
     "zero_skip_stats",
+    "tile_attainable",
     "DeconvGeometry",
+    "deconv_traffic",
     "exact_input_extent",
+    "full_image_traffic",
+    "halo_tile",
     "input_tile_extent",
+    "kernel_vmem_bytes",
     "legal_tile_factors",
     "out_size",
 ]

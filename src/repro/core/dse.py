@@ -19,7 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .tiling import DeconvGeometry, legal_tile_factors, vmem_footprint
+from .tiling import (DeconvGeometry, deconv_traffic, legal_tile_factors,
+                     vmem_footprint)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +116,37 @@ def _ctc_ratio(geom: DeconvGeometry, t_oh: int, co_tile: int,
     out_bytes = t_oh * t_oh * co_t * dtype_bytes
     total_bytes = n_tiles * (in_bytes + w_bytes + out_bytes)
     return geom.ops / max(total_bytes, 1)
+
+
+def tile_attainable(
+    geom: DeconvGeometry,
+    t_oh: int,
+    t_ow: int,
+    t_ci: int,
+    t_co: int,
+    device: Device = TPU_V5E,
+) -> DsePoint:
+    """Roofline-attainable throughput for one *full* tile choice.
+
+    Generalizes `layer_dse` (square spatial, fixed co_tile) to the four
+    tile factors the Pallas kernel actually takes — this is the scoring
+    function the autotuner (kernels/autotune.py) ranks candidates by.
+    CTC uses the halo-streaming traffic model: the kernel re-streams one
+    Eq. 5 window + one weight slab per CI step of every output tile."""
+    traffic = deconv_traffic(geom, t_oh, t_ow, t_ci, t_co,
+                             device.dtype_bytes)
+    ctc = geom.ops / max(traffic.total_bytes, 1)
+    attainable = min(device.peak_ops, ctc * device.bandwidth)
+    from .tiling import kernel_vmem_bytes
+
+    return DsePoint(
+        t_oh=t_oh,
+        ctc=ctc,
+        attainable_ops=attainable,
+        vmem_bytes=kernel_vmem_bytes(geom, t_oh, t_ow, t_ci, t_co,
+                                     device.dtype_bytes),
+        bandwidth_bound=ctc * device.bandwidth < device.peak_ops,
+    )
 
 
 def optimize_unified_tile(

@@ -47,6 +47,94 @@ def exact_input_extent(
 
 
 @dataclasses.dataclass(frozen=True)
+class HaloTile:
+    """Eq. 5 input-tile geometry for one spatial dim of the Pallas kernel.
+
+    An S-aligned output tile of ``t_out`` pixels starting at output row
+    ``j * t_out`` reads the *constant-extent* input window
+
+        rows [ j * (t_out // S) + base,  j * (t_out // S) + base + extent )
+
+    of the host-padded input — ``extent = t_out/S + delta_max - delta_min``
+    (the exact form of the paper's Eq. 5 bound) and ``base >= 0`` because
+    the host pads ``left_halo`` rows on the left.  Consecutive windows
+    overlap by ``extent - t_out/S`` halo rows; the kernel's per-tap slices
+    inside the window are *static*: tap displacement ``d`` lives at local
+    row ``d - delta_min``.
+    """
+
+    t_out: int       # output tile extent (multiple of S)
+    stride: int
+    extent: int      # input window extent T_I (rows streamed per tile)
+    base: int        # element offset of tile j's window: j*(t_out/S) + base
+    local_zero: int  # local row of displacement delta=0 == -delta_min
+
+    @property
+    def step(self) -> int:
+        """Window start advance per output tile (t_out / S input rows)."""
+        return self.t_out // self.stride
+
+    @property
+    def overlap(self) -> int:
+        """Halo rows shared by consecutive windows."""
+        return self.extent - self.step
+
+    def local_offset(self, delta: int) -> int:
+        """Static in-window row of a tap with input displacement ``delta``."""
+        return delta + self.local_zero
+
+    def min_padded_extent(self, n_tiles: int) -> int:
+        """Smallest padded input extent covering all n_tiles windows."""
+        return (n_tiles - 1) * self.step + self.base + self.extent
+
+
+def halo_tile(t_out: int, kernel: int, stride: int, padding: int) -> HaloTile:
+    """Input-window geometry for an S-aligned output tile (paper Eq. 5).
+
+    The window extent equals ``exact_input_extent`` — the max-over-tiles
+    input span — so the Pallas BlockSpec streams exactly the rows the tile
+    touches (plus nothing), which is what drops per-tile HBM traffic from
+    O(padded image) to O(T_I).
+    """
+    assert t_out % stride == 0, "tiles must be stride-aligned"
+    plan = make_phase_plan(kernel, stride, padding)
+    step = t_out // stride
+    extent = step + plan.delta_max - plan.delta_min
+    # host pads left_halo = max(0, -delta_min) rows; window j then starts at
+    # j*step + (left_halo + delta_min) = j*step + max(0, delta_min) >= 0.
+    base = plan.left_halo + plan.delta_min
+    return HaloTile(
+        t_out=t_out,
+        stride=stride,
+        extent=extent,
+        base=base,
+        local_zero=-plan.delta_min,
+    )
+
+
+def kernel_vmem_bytes(
+    geom: DeconvGeometry,
+    t_oh: int,
+    t_ow: int,
+    t_ci: int,
+    t_co: int,
+    dtype_bytes: int = 4,
+) -> int:
+    """Precise VMEM footprint of the halo-streaming Pallas kernel.
+
+    Input/weight/bias blocks are double-buffered by the Mosaic pipeline
+    (x2); the f32 accumulator scratch and the output block are single."""
+    ht_h = halo_tile(t_oh, geom.kernel, geom.stride, geom.padding)
+    ht_w = halo_tile(t_ow, geom.kernel, geom.stride, geom.padding)
+    x_bytes = ht_h.extent * ht_w.extent * t_ci * dtype_bytes
+    w_bytes = geom.kernel * geom.kernel * t_ci * t_co * dtype_bytes
+    b_bytes = t_co * dtype_bytes
+    y_bytes = t_oh * t_ow * t_co * dtype_bytes
+    acc_bytes = t_oh * t_ow * t_co * 4
+    return 2 * (x_bytes + w_bytes + b_bytes) + y_bytes + acc_bytes
+
+
+@dataclasses.dataclass(frozen=True)
 class DeconvGeometry:
     """Static geometry of one deconv layer."""
 
@@ -92,6 +180,90 @@ class DeconvGeometry:
         i_max = (self.out_h - 1) // self.stride + plan.delta_max
         pad_r = max(0, i_max - (self.in_h - 1))
         return pad_l, pad_r
+
+
+@dataclasses.dataclass(frozen=True)
+class DeconvTraffic:
+    """Modeled HBM traffic of the halo-streaming kernel for one layer
+    (per batch element).  ``in_bytes_per_tile`` is the Eq. 5 window — a
+    constant per tile, independent of image size (the paper's point).
+    Bytes only; CTC / attainable throughput live in `dse.tile_attainable`.
+    """
+
+    n_tiles: int              # spatial x C_out output tiles
+    n_ci_steps: int           # C_in grid steps per output tile
+    in_bytes_per_tile: int    # halo window bytes per (tile, ci step)
+    w_bytes_per_tile: int     # weight slab bytes per (tile, ci step)
+    out_bytes_per_tile: int   # one-shot output block bytes
+    total_bytes: int
+
+
+def deconv_traffic(
+    geom: DeconvGeometry,
+    t_oh: int,
+    t_ow: int,
+    t_ci: int,
+    t_co: int,
+    dtype_bytes: int = 4,
+) -> DeconvTraffic:
+    """HBM bytes moved by the halo-streaming kernel (per batch element).
+
+    Per output tile the CI grid re-streams one Eq. 5 input window and one
+    weight slab per CI step; the output block is written once.  This is the
+    modeled side of the modeled-vs-measured accounting in
+    benchmarks/bench_deconv.py."""
+    ht_h = halo_tile(t_oh, geom.kernel, geom.stride, geom.padding)
+    ht_w = halo_tile(t_ow, geom.kernel, geom.stride, geom.padding)
+    n_h = -(-geom.out_h // t_oh)
+    n_w = -(-geom.out_w // t_ow)
+    n_co = -(-geom.c_out // t_co)
+    n_ci = -(-geom.c_in // t_ci)
+    in_b = ht_h.extent * ht_w.extent * t_ci * dtype_bytes
+    w_b = geom.kernel * geom.kernel * t_ci * t_co * dtype_bytes
+    out_b = t_oh * t_ow * t_co * dtype_bytes
+    n_tiles = n_h * n_w * n_co
+    total = n_tiles * (n_ci * (in_b + w_b) + out_b)
+    return DeconvTraffic(
+        n_tiles=n_tiles,
+        n_ci_steps=n_ci,
+        in_bytes_per_tile=in_b,
+        w_bytes_per_tile=w_b,
+        out_bytes_per_tile=out_b,
+        total_bytes=total,
+    )
+
+
+def full_image_traffic(
+    geom: DeconvGeometry,
+    t_oh: int,
+    t_ow: int,
+    t_ci: int,
+    t_co: int,
+    dtype_bytes: int = 4,
+) -> DeconvTraffic:
+    """HBM traffic of the pre-halo pipeline (every grid program re-streamed
+    the whole padded input per CI step) — the baseline the tentpole kills.
+    Same structure as `deconv_traffic`; only ``in_bytes_per_tile`` differs
+    (the whole padded image instead of the Eq. 5 window)."""
+    pad_l, pad_r = geom.halo_padding()
+    ihp = geom.in_h + pad_l + pad_r
+    iwp = geom.in_w + pad_l + pad_r
+    n_h = -(-geom.out_h // t_oh)
+    n_w = -(-geom.out_w // t_ow)
+    n_co = -(-geom.c_out // t_co)
+    n_ci = -(-geom.c_in // t_ci)
+    in_b = ihp * iwp * t_ci * dtype_bytes
+    w_b = geom.kernel * geom.kernel * t_ci * t_co * dtype_bytes
+    out_b = t_oh * t_ow * t_co * dtype_bytes
+    n_tiles = n_h * n_w * n_co
+    return DeconvTraffic(
+        n_tiles=n_tiles,
+        n_ci_steps=n_ci,
+        in_bytes_per_tile=in_b,
+        w_bytes_per_tile=w_b,
+        out_bytes_per_tile=out_b,
+        total_bytes=n_tiles * (n_ci * (in_b + w_b) + out_b),
+    )
 
 
 def legal_tile_factors(

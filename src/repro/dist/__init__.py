@@ -1,0 +1,18 @@
+"""Distribution substrate: sharding context, logical-axis rules, fault
+tolerance, and pipeline parallelism.
+
+The model code never names mesh axes directly — it annotates arrays with
+*logical* axes (``constrain(x, "batch", None, "mlp")``) and the active
+`sharding_context` maps them onto physical mesh axes through the policy
+rules (`make_rules`).  Outside a context every annotation is a no-op, so
+the same model runs unchanged on one device.
+"""
+from .context import constrain, current, sharding_context
+from .sharding import (batch_pspec, cache_specs, make_rules, spec_to_pspec,
+                       tree_shardings)
+
+__all__ = [
+    "constrain", "current", "sharding_context",
+    "batch_pspec", "cache_specs", "make_rules", "spec_to_pspec",
+    "tree_shardings",
+]

@@ -1,0 +1,51 @@
+"""Thread-local sharding context: (mesh, logical-axis rules).
+
+`constrain` is the single annotation primitive the models use.  It is a
+no-op unless a `sharding_context` is active, which keeps every model
+runnable on a single device (tests, CPU smoke) with zero branching at the
+call sites.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+
+_state = threading.local()
+
+
+def current() -> Tuple[Optional[object], Optional[dict]]:
+    """The active (mesh, rules), or (None, None) outside any context."""
+    return getattr(_state, "mesh", None), getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, rules):
+    """Activate (mesh, rules) for the dynamic extent of a step function."""
+    prev = current()
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """with_sharding_constraint through the logical-axis rules.
+
+    Each positional arg names the logical axis of the corresponding array
+    dim (None = replicated).  Axes without a rule, or whose dim does not
+    divide the mapped mesh-axis extent, silently fall back to replicated —
+    the constraint is a performance hint, never a correctness requirement.
+    """
+    mesh, rules = current()
+    if mesh is None or rules is None:
+        return x
+    from .sharding import spec_to_pspec
+
+    spec = spec_to_pspec(rules, tuple(logical_axes), mesh=mesh, shape=x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )

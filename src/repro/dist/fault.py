@@ -1,0 +1,112 @@
+"""Fault tolerance primitives: straggler detection, liveness heartbeats,
+and elastic meshes that scale the data axis down when devices are lost.
+
+The training driver (train/loop.py) composes these with the async
+checkpointer: a straggler is logged, a missed heartbeat triggers the
+failure callback, and recovery re-enters the step loop on a smaller mesh
+with `reshard_tree`-migrated state.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+class StragglerMonitor:
+    """EMA-based step-time outlier detector.
+
+    A step slower than ``factor`` x the EMA is flagged; flagged steps do NOT
+    update the EMA (a straggler must not poison the baseline it is judged
+    against).  The first ``warmup_steps`` observations only seed the EMA.
+    """
+
+    def __init__(self, factor: float = 3.0, warmup_steps: int = 2,
+                 decay: float = 0.9):
+        self.factor = factor
+        self.warmup_steps = warmup_steps
+        self.decay = decay
+        self.ema: Optional[float] = None
+        self.flagged: List[int] = []
+        self._n = 0
+
+    def observe(self, step: int, dt: float) -> bool:
+        self._n += 1
+        if self.ema is None:
+            self.ema = dt
+            return False
+        if self._n > self.warmup_steps and dt > self.factor * self.ema:
+            self.flagged.append(step)
+            return True
+        self.ema = self.decay * self.ema + (1.0 - self.decay) * dt
+        return False
+
+
+class Heartbeat:
+    """Fires ``on_failure`` once when no tick arrives within ``timeout_s``.
+
+    A daemon thread polls the last-tick timestamp; `tick()` is the only
+    thing the (possibly blocked) training loop must call.  `close()` stops
+    the watcher; it never fires after close.
+    """
+
+    def __init__(self, timeout_s: float, on_failure: Callable[[], None],
+                 poll_s: Optional[float] = None):
+        self.timeout_s = timeout_s
+        self.on_failure = on_failure
+        self._last = time.monotonic()
+        self._fired = False
+        self._stop = threading.Event()
+        self._poll = poll_s if poll_s is not None else max(timeout_s / 10, 0.01)
+        self._thread = threading.Thread(target=self._watch, daemon=True)
+        self._thread.start()
+
+    def tick(self) -> None:
+        self._last = time.monotonic()
+        self._fired = False
+
+    def _watch(self) -> None:
+        while not self._stop.is_set():
+            if (not self._fired
+                    and time.monotonic() - self._last > self.timeout_s):
+                self._fired = True
+                self.on_failure()
+            self._stop.wait(self._poll)
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=1.0)
+
+
+def elastic_mesh(devices: Sequence, model_parallel: int = 1) -> Mesh:
+    """(data, model) mesh over the largest usable prefix of ``devices``.
+
+    The model axis is fixed by the sharded weights; losing devices shrinks
+    the data axis: data = len(devices) // model_parallel.  Surviving
+    devices beyond data*model are left idle (they rejoin at the next
+    remesh) — the paper-style graceful degradation for edge fleets.
+    """
+    if model_parallel < 1:
+        raise ValueError("model_parallel must be >= 1")
+    data = len(devices) // model_parallel
+    if data < 1:
+        raise ValueError(
+            f"{len(devices)} device(s) cannot host model_parallel="
+            f"{model_parallel}")
+    used = np.array(devices[: data * model_parallel]).reshape(
+        data, model_parallel)
+    return Mesh(used, ("data", "model"))
+
+
+def reshard_tree(tree, sharding):
+    """Migrate a pytree onto new sharding(s) (e.g. after an elastic remesh).
+
+    ``sharding`` is either one sharding applied to every leaf or a
+    matching pytree of shardings; jax routes the transfer device-to-device
+    where possible and through the host otherwise.
+    """
+    return jax.device_put(tree, sharding)

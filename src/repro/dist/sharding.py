@@ -1,0 +1,172 @@
+"""Logical-axis -> mesh-axis rules and NamedSharding construction.
+
+Policies (mesh axes are ("pod",)? + ("data", "model")):
+
+* ``tp``       — tensor parallelism only: weight feature axes (mlp, heads,
+                 kv_heads, vocab, experts) shard the model axis; params are
+                 replicated across data.  Avoids the per-microbatch FSDP
+                 weight all-gather.
+* ``fsdp_tp``  — tp plus FSDP: the embed (d_model) axis of every weight
+                 shards the data axis, so optimizer state scales with the
+                 full mesh.
+
+The batch axis always shards data (and pod when present).  A logical axis
+whose dim does not divide the mapped mesh extent degrades to replicated
+(checked per array in `spec_to_pspec`).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[str, Tuple[str, ...]]]
+
+# axes that are never sharded (scan-stacked layer dim, small norms)
+_UNSHARDED = ("layers",)
+
+
+def make_rules(policy: str, multi_pod: bool = False) -> Rules:
+    batch_axes: Union[str, Tuple[str, ...]] = (
+        ("pod", "data") if multi_pod else "data"
+    )
+    rules: Rules = {
+        "batch": batch_axes,
+        "moe_group": batch_axes,
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "experts": "model",
+    }
+    if policy == "fsdp_tp":
+        rules["embed"] = "data"
+    elif policy != "tp":
+        raise ValueError(f"unknown sharding policy {policy!r}")
+    return rules
+
+
+def _axis_size(mesh, axis: Union[str, Tuple[str, ...]]) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape.get(a, 1)
+        return n
+    return mesh.shape.get(axis, 1)
+
+
+def spec_to_pspec(
+    rules: Rules,
+    spec: Sequence[Optional[str]],
+    mesh=None,
+    shape: Optional[Tuple[int, ...]] = None,
+) -> P:
+    """Map a logical-axis tuple onto a PartitionSpec.
+
+    Unknown logical names and never-sharded axes map to None; when `shape`
+    is given, any dim that does not divide the mesh extent also degrades to
+    None (replicated) so the sharding is always constructible.
+    """
+    out = []
+    used: set = set()
+    for i, name in enumerate(spec):
+        axis = None
+        if name is not None and name not in _UNSHARDED:
+            axis = rules.get(name)
+        if axis is not None:
+            flat = axis if isinstance(axis, tuple) else (axis,)
+            if any(a in used for a in flat):
+                axis = None  # a mesh axis may appear once per spec
+        if axis is not None and mesh is not None:
+            n = _axis_size(mesh, axis)
+            present = all(a in mesh.shape
+                          for a in (axis if isinstance(axis, tuple) else (axis,)))
+            if not present or n <= 1:
+                axis = None
+            elif shape is not None and shape[i] % n != 0:
+                axis = None
+        if axis is not None:
+            used.update(axis if isinstance(axis, tuple) else (axis,))
+        out.append(axis)
+    return P(*out)
+
+
+def _is_spec_leaf(s: Any) -> bool:
+    return isinstance(s, tuple)
+
+
+def tree_shardings(mesh, rules: Rules, shapes_tree, specs_tree):
+    """NamedSharding tree from a (params/shapes, logical specs) pair.
+
+    `shapes_tree` leaves are arrays or ShapeDtypeStructs; `specs_tree`
+    mirrors it with tuple-of-logical-axis leaves.
+    """
+    spec_leaves, treedef = jax.tree_util.tree_flatten(
+        specs_tree, is_leaf=_is_spec_leaf
+    )
+    shape_leaves = treedef.flatten_up_to(shapes_tree)
+    out = []
+    for shp, spec in zip(shape_leaves, spec_leaves):
+        shape = getattr(shp, "shape", None)
+        out.append(NamedSharding(
+            mesh, spec_to_pspec(rules, spec, mesh=mesh, shape=shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_pspec(mesh, rules: Rules, batch_size: int, ndim: int) -> P:
+    """PartitionSpec for a batch-leading array: dim 0 on the batch axes when
+    divisible, everything else replicated."""
+    axis = rules.get("batch")
+    if axis is not None:
+        n = _axis_size(mesh, axis)
+        if n <= 1 or batch_size % n != 0:
+            axis = None
+    return P(axis, *([None] * (ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# serving-cache logical specs (mirrors models.transformer.init_cache)
+# ---------------------------------------------------------------------------
+def _attn_cache_spec(cfg) -> Dict[str, tuple]:
+    kv = ("batch", None, "kv_heads", None)
+    spec = {"k": kv, "v": kv, "slot_pos": (None,)}
+    if cfg.kv_quant:
+        spec["k_scale"] = kv
+        spec["v_scale"] = kv
+    return spec
+
+
+def _block_cache_spec(cfg, kind: str) -> Dict[str, tuple]:
+    if kind in ("global", "local"):
+        return _attn_cache_spec(cfg)
+    if kind == "griffin":
+        return {"conv": ("batch", None, None), "h": ("batch", None)}
+    if kind == "mlstm":
+        return {
+            "C": ("batch", "heads", None, None),
+            "n": ("batch", "heads", None),
+            "m": ("batch", "heads"),
+            "conv": ("batch", None, None),
+        }
+    if kind == "slstm":
+        st = ("batch", "heads", None)
+        return {"c": st, "n": st, "h": st, "m": st}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg) -> Dict[str, Any]:
+    """Logical spec tree matching init_cache(cfg, ...)'s pytree structure."""
+    from ..models import nn
+
+    pattern = cfg.block_pattern
+    unit = {f"b{i}": _block_cache_spec(cfg, kind)
+            for i, kind in enumerate(pattern)}
+    specs: Dict[str, Any] = {
+        "units": nn.stack_specs(unit),
+        "pos": (),
+    }
+    if cfg.n_rem:
+        specs["rem"] = {f"b{i}": _block_cache_spec(cfg, pattern[i])
+                        for i in range(cfg.n_rem)}
+    return specs

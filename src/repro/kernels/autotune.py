@@ -1,0 +1,298 @@
+"""DSE-driven tile autotuner for the deconv Pallas kernels.
+
+Tile selection runs in three stages, cheapest first:
+
+1. **Cache** — a JSON store keyed by (backend, dtype, layer geometry);
+   serving engines and repeated benchmark runs never re-tune.
+2. **Roofline model** — enumerate legal candidates (stride-aligned square
+   spatial tiles x channel-tile options), drop everything whose
+   `kernel_vmem_bytes` exceeds the device's on-chip budget, and rank the
+   rest by `dse.tile_attainable` (the paper's §V-A attainable-throughput
+   construction, Fig. 5).
+3. **On-device timing** (optional, ``refine=True``) — time the few
+   top-ranked candidates with the real kernel and keep the fastest.  Only
+   available outside a jit trace; inside a trace the model choice stands.
+
+The cache file lives at ``$REPRO_AUTOTUNE_CACHE`` (default
+``~/.cache/repro/autotune.json``); ``clear_cache()`` wipes it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dse import TPU_V5E, Device, tile_attainable
+from ..core.tiling import DeconvGeometry, kernel_vmem_bytes
+
+_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_CACHE_VERSION = 1
+_lock = threading.Lock()
+_cache: Optional[Dict[str, dict]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TileChoice:
+    """One resolved tile assignment for the deconv kernel grid."""
+
+    t_oh: int
+    t_ow: int
+    t_ci: int
+    t_co: int
+    source: str = "model"     # cache | model | timed | fallback
+    attainable_ops: float = 0.0
+    vmem_bytes: int = 0
+
+    def as_kwargs(self) -> Dict[str, int]:
+        return {"t_oh": self.t_oh, "t_ow": self.t_ow,
+                "t_ci": self.t_ci, "t_co": self.t_co}
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# persistent cache
+# ---------------------------------------------------------------------------
+def cache_path() -> pathlib.Path:
+    default = pathlib.Path.home() / ".cache" / "repro" / "autotune.json"
+    return pathlib.Path(os.environ.get(_CACHE_ENV, str(default)))
+
+
+def cache_key(geom: DeconvGeometry, dtype, backend: str,
+              device: Device = TPU_V5E) -> str:
+    d = np.dtype(dtype).name
+    # the platform and the modeled device are part of the key: refine=True
+    # timings taken in CPU interpret mode must never be served as
+    # authoritative on TPU, and a choice fitted to one device's VMEM
+    # budget/roofline must not leak to another's
+    plat = jax.default_backend()
+    return (f"v{_CACHE_VERSION}|{plat}|{device.name}|{backend}|{d}|"
+            f"i{geom.in_h}x{geom.in_w}|c{geom.c_in}>{geom.c_out}|"
+            f"k{geom.kernel}s{geom.stride}p{geom.padding}")
+
+
+def _load_cache() -> Dict[str, dict]:
+    global _cache
+    if _cache is None:
+        path = cache_path()
+        try:
+            _cache = json.loads(path.read_text())
+        except (OSError, ValueError):
+            _cache = {}
+    return _cache
+
+
+def _store(key: str, choice: TileChoice) -> None:
+    with _lock:
+        cache = _load_cache()
+        cache[key] = dataclasses.asdict(choice)
+        path = cache_path()
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            tmp = path.with_suffix(".tmp")
+            tmp.write_text(json.dumps(cache, indent=1, sort_keys=True))
+            tmp.replace(path)
+        except OSError:
+            pass  # cache is an optimization; never fail the call
+
+
+def clear_cache() -> None:
+    """Drop the in-memory cache and delete the cache file."""
+    global _cache
+    with _lock:
+        _cache = {}
+        try:
+            cache_path().unlink()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration + model ranking
+# ---------------------------------------------------------------------------
+def _channel_tile_options(c: int) -> List[int]:
+    """Channel-tile candidates: lane-width multiples clamped to the padded
+    channel count (the kernel pads channels up to the tile)."""
+    cp = _round_up(c, 8)
+    return sorted({min(cp, v) for v in (32, 64, 128)})
+
+
+def legal_tile_candidates(
+    geom: DeconvGeometry,
+    dtype_bytes: int = 4,
+    vmem_budget: int = TPU_V5E.onchip_bytes,
+    max_spatial: int = 64,
+) -> List[Tuple[int, int, int, int]]:
+    """All (t_oh, t_ow, t_ci, t_co) with stride-aligned square spatial tiles
+    that fit the on-chip budget (paper Fig. 5 'legal solutions')."""
+    s = geom.stride
+    oh_cap = _round_up(min(geom.out_h, max_spatial), s)
+    spatial = list(range(s, oh_cap + 1, s))
+    # the full-output tile (single spatial program) is always a candidate,
+    # even beyond max_spatial — the VMEM filter below still applies
+    spatial.append(_round_up(geom.out_h, s))
+    out: List[Tuple[int, int, int, int]] = []
+    for t in sorted(set(spatial)):
+        for t_ci in _channel_tile_options(geom.c_in):
+            for t_co in _channel_tile_options(geom.c_out):
+                fp = kernel_vmem_bytes(geom, t, t, t_ci, t_co, dtype_bytes)
+                if fp <= vmem_budget:
+                    out.append((t, t, t_ci, t_co))
+    return out
+
+
+def rank_candidates(
+    geom: DeconvGeometry,
+    candidates: List[Tuple[int, int, int, int]],
+    device: Device = TPU_V5E,
+) -> List[TileChoice]:
+    """Sort by modeled attainable throughput (desc), tie-breaking toward
+    higher CTC then larger tiles (fewer grid programs)."""
+    scored = []
+    for (t_oh, t_ow, t_ci, t_co) in candidates:
+        pt = tile_attainable(geom, t_oh, t_ow, t_ci, t_co, device)
+        scored.append(TileChoice(
+            t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co,
+            source="model",
+            attainable_ops=pt.attainable_ops,
+            vmem_bytes=pt.vmem_bytes,
+        ))
+    return sorted(
+        scored,
+        key=lambda c: (-c.attainable_ops, -c.t_oh * c.t_ow, -c.t_ci * c.t_co),
+    )
+
+
+def fallback_tiles(
+    geom: DeconvGeometry,
+    dtype_bytes: int = 4,
+    vmem_budget: int = TPU_V5E.onchip_bytes,
+) -> TileChoice:
+    """The old fixed heuristic (~32x32 spatial, 128-channel tiles), now
+    clamped through `kernel_vmem_bytes` so large CI x CO layers can no
+    longer blow the VMEM budget: shrink channels first (halving), then the
+    spatial tile, until the footprint fits."""
+    s = geom.stride
+    t_oh = min(_round_up(geom.out_h, s), _round_up(32, s))
+    t_ow = min(_round_up(geom.out_w, s), _round_up(32, s))
+    t_ci = min(_round_up(geom.c_in, 8), 128)
+    t_co = min(_round_up(geom.c_out, 8), 128)
+
+    def fits() -> bool:
+        return kernel_vmem_bytes(
+            geom, t_oh, t_ow, t_ci, t_co, dtype_bytes) <= vmem_budget
+
+    while not fits():
+        if t_ci > 8:
+            t_ci = max(8, t_ci // 2)
+        elif t_co > 8:
+            t_co = max(8, t_co // 2)
+        elif t_oh > s or t_ow > s:
+            t_oh = max(s, _round_up(t_oh // 2, s))
+            t_ow = max(s, _round_up(t_ow // 2, s))
+        else:
+            break  # smallest legal tile; nothing left to shrink
+    return TileChoice(
+        t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co, source="fallback",
+        vmem_bytes=kernel_vmem_bytes(geom, t_oh, t_ow, t_ci, t_co,
+                                     dtype_bytes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# on-device timing refinement
+# ---------------------------------------------------------------------------
+def _time_candidate(
+    geom: DeconvGeometry,
+    choice: TileChoice,
+    dtype,
+    backend: str,
+    reps: int = 3,
+) -> float:
+    """Median wall-clock of the real kernel at this tile choice (seconds).
+
+    Proxy caveats: inputs/weights are dense random samples, so for
+    backend="pallas_sparse" the measured schedule keeps every CI slab —
+    the ranking reflects the dense workload, not a pruned network's; and
+    on non-TPU hosts the kernel runs in interpret mode, where relative
+    timings only loosely track TPU behavior."""
+    from .deconv2d import deconv2d
+
+    key = jax.random.PRNGKey(0)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (1, geom.in_h, geom.in_w, geom.c_in), dtype)
+    w = (jax.random.normal(
+        kw, (geom.kernel, geom.kernel, geom.c_in, geom.c_out), dtype) * 0.1
+    ).astype(dtype)
+    if backend == "pallas_sparse":
+        from .deconv2d_sparse import deconv2d_sparse as fn
+    else:
+        fn = deconv2d
+    kwargs = choice.as_kwargs()
+    jax.block_until_ready(
+        fn(x, w, None, geom.stride, geom.padding, **kwargs))  # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            fn(x, w, None, geom.stride, geom.padding, **kwargs))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def choose_tiles(
+    geom: DeconvGeometry,
+    dtype=jnp.float32,
+    backend: str = "pallas",
+    refine: bool = False,
+    refine_top_k: int = 3,
+    device: Device = TPU_V5E,
+    use_cache: bool = True,
+) -> TileChoice:
+    """Resolve the tile assignment for one deconv layer.
+
+    ``refine=True`` times the top-`refine_top_k` model-ranked candidates on
+    the current backend and keeps the fastest (then persists it, so the
+    timing cost is paid once per (geometry, dtype, backend))."""
+    dtype_bytes = np.dtype(dtype).itemsize
+    key = cache_key(geom, dtype, backend, device)
+    if use_cache:
+        hit = _load_cache().get(key)
+        # a refine=True request is only satisfied by a *timed* entry; a
+        # stored model/fallback choice must not suppress the requested
+        # on-device refinement (the re-tune overwrites it below)
+        if hit is not None and (not refine or hit.get("source") == "timed"):
+            return dataclasses.replace(
+                TileChoice(**{k: v for k, v in hit.items()
+                              if k in TileChoice.__dataclass_fields__}),
+                source="cache")
+
+    cands = legal_tile_candidates(geom, dtype_bytes, device.onchip_bytes)
+    if not cands:
+        choice = fallback_tiles(geom, dtype_bytes, device.onchip_bytes)
+    else:
+        ranked = rank_candidates(geom, cands, device)
+        choice = ranked[0]
+        if refine:
+            timed = []
+            for c in ranked[:refine_top_k]:
+                try:
+                    timed.append((_time_candidate(geom, c, dtype, backend), c))
+                except Exception:  # a candidate may fail to lower; skip it
+                    continue
+            if timed:
+                choice = dataclasses.replace(
+                    min(timed, key=lambda tc: tc[0])[1], source="timed")
+    if use_cache:
+        _store(key, choice)
+    return choice

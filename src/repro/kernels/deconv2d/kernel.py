@@ -5,22 +5,26 @@ This is the paper's FPGA accelerator re-derived for the TPU memory hierarchy:
 * **Grid = disjoint output tiles** (reverse loop over the *output* space):
   each grid program owns one ``(T_OH, T_OW, T_CO)`` output block — one-shot
   writes, no overlapping-sum, exactly the paper's CU array.
+* **Eq. 5 input streaming**: the x BlockSpec is a per-output-tile *halo
+  window* of constant extent ``T_IH x T_IW`` (core.tiling.halo_tile) whose
+  unblocked index map follows the output grid — each program streams only
+  the input rows its tile touches (overlapping halo reads), never the whole
+  image.  HBM traffic per tile is O(T_IH*T_IW), independent of image size.
 * **Eq. 3 offsets → trace-time phase plan**: the stride-hole-skipping offsets
   are folded into a static (phase → taps, input displacement) table computed
-  on the host; the kernel body contains *zero* modulo/division ops.
-* **Enhancement (3) — decoupled memory access**: the HBM→VMEM streaming of
-  the next input/weight blocks overlaps compute via the Mosaic pipeline
-  (BlockSpec double buffering); the non-sequential (strided, per-phase)
-  access pattern happens only on VMEM-resident tiles.
+  on the host; inside the halo window every tap slice is *static* (local row
+  ``delta - delta_min``) — the kernel body contains zero modulo/division ops
+  and zero grid-dependent address arithmetic.
 * **Enhancement (2) — loop interchange**: the K×K tap loops are the outermost
   static loops; each (tap, phase) contribution is a channel-contraction
   matmul on the MXU with the weight slab held stationary.
+* **Fused epilogue**: bias is the accumulator's initial value (Algorithm 1's
+  initializeToBias) and the activation (relu/tanh) runs in the ``_flush``
+  phase on the f32 accumulator — the generator never materializes a
+  pre-activation layer in HBM.
 
-Geometry notes: the input is host-padded (`halo` rows/cols) so that every tap
-access of every stride-aligned tile is in bounds — all address arithmetic is
-resolved before the kernel runs, as in the paper.  The accumulator scratch is
-laid out ``(T_OH/S, S, T_OW/S, S, T_CO)`` so the final phase reassembly is a
-pure reshape (no transpose).
+The accumulator scratch is laid out ``(T_OH/S, S, T_OW/S, S, T_CO)`` so the
+final phase reassembly is a pure reshape (no transpose).
 """
 from __future__ import annotations
 
@@ -33,27 +37,69 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ...core.offsets import PhasePlan
+from ...core.tiling import HaloTile, halo_tile
+
+# renamed TPUCompilerParams -> CompilerParams across jax versions
+COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+ACTIVATIONS = (None, "none", "relu", "tanh")
+
+
+def apply_activation(y: jax.Array, activation: Optional[str]) -> jax.Array:
+    """Epilogue nonlinearity on the f32 accumulator (shared with refs)."""
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unsupported fused activation {activation!r}; "
+                         f"expected one of {ACTIVATIONS}")
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(y)
+    return y
+
+
+def x_halo_blockspec(
+    ht_h: HaloTile, ht_w: HaloTile, t_ci: int
+) -> pl.BlockSpec:
+    """Per-output-tile input window BlockSpec (the Eq. 5 streaming read).
+
+    Unblocked indexing: the index map returns *element* offsets, which is
+    what lets consecutive output tiles read overlapping halo windows —
+    impossible with block-granular indexing.  Exposed as a function so the
+    tests can assert the block shape / index map directly.
+    """
+    step_h, base_h = ht_h.step, ht_h.base
+    step_w, base_w = ht_w.step, ht_w.base
+
+    def index_map(nb, oh, ow, co, ci):
+        return (nb, oh * step_h + base_h, ow * step_w + base_w, ci * t_ci)
+
+    return pl.BlockSpec(
+        (1, ht_h.extent, ht_w.extent, t_ci),
+        index_map,
+        indexing_mode=pl.unblocked,
+    )
 
 
 def _deconv2d_kernel(
-    x_ref,      # (1, IHp, IWp, T_CI)   VMEM
-    w_ref,      # (K, K, T_CI, T_CO)    VMEM
-    b_ref,      # (1, T_CO)             VMEM
-    o_ref,      # (1, T_OH, T_OW, T_CO) VMEM
+    x_ref,      # (1, T_IH, T_IW, T_CI)  VMEM halo window
+    w_ref,      # (K, K, T_CI, T_CO)     VMEM
+    b_ref,      # (1, T_CO)              VMEM
+    o_ref,      # (1, T_OH, T_OW, T_CO)  VMEM
     acc_ref,    # (T_OH/S, S, T_OW/S, S, T_CO) f32 scratch
     *,
     plan: PhasePlan,
+    ht_h: HaloTile,
+    ht_w: HaloTile,
     t_oh: int,
     t_ow: int,
-    pad_l: int,
     n_ci_tiles: int,
+    activation: Optional[str],
     out_dtype,
 ):
     s = plan.stride
     th, tw = t_oh // s, t_ow // s
     ci_idx = pl.program_id(4)
-    oh_t = pl.program_id(1)
-    ow_t = pl.program_id(2)
 
     @pl.when(ci_idx == 0)
     def _init():
@@ -70,9 +116,11 @@ def _deconv2d_kernel(
             acc = jnp.zeros((th * tw, t_co), dtype=jnp.float32)
             for kh, dh in plan.taps[ph]:
                 for kw, dw in plan.taps[pw]:
-                    r0 = oh_t * th + dh + pad_l
-                    c0 = ow_t * tw + dw + pad_l
-                    xs = x_ref[0, pl.ds(r0, th), pl.ds(c0, tw), :]
+                    # static halo-local rows: the window already starts at
+                    # this tile's minimum displacement.
+                    r0 = ht_h.local_offset(dh)
+                    c0 = ht_w.local_offset(dw)
+                    xs = x_ref[0, r0:r0 + th, c0:c0 + tw, :]
                     acc = acc + jnp.dot(
                         xs.reshape(th * tw, t_ci),
                         w_ref[kh, kw],
@@ -82,8 +130,9 @@ def _deconv2d_kernel(
 
     @pl.when(ci_idx == n_ci_tiles - 1)
     def _flush():
-        # One-shot disjoint write of the finished output block.
-        o_ref[0] = acc_ref[...].reshape(t_oh, t_ow, t_co).astype(out_dtype)
+        # One-shot disjoint write: reassemble phases, fused epilogue, cast.
+        y = acc_ref[...].reshape(t_oh, t_ow, t_co)
+        o_ref[0] = apply_activation(y, activation).astype(out_dtype)
 
 
 def deconv2d_pallas_call(
@@ -98,7 +147,7 @@ def deconv2d_pallas_call(
     t_ow: int,
     t_ci: int,
     t_co: int,
-    pad_l: int,
+    activation: Optional[str] = None,
     interpret: bool = False,
 ) -> jax.Array:
     n, ihp, iwp, cip = x_padded.shape
@@ -107,26 +156,31 @@ def deconv2d_pallas_call(
     s = plan.stride
     assert t_oh % s == 0 and t_ow % s == 0, "tiles must be stride-aligned"
     assert cip % t_ci == 0 and cop % t_co == 0
+    ht_h = halo_tile(t_oh, k, s, plan.padding)
+    ht_w = halo_tile(t_ow, k, s, plan.padding)
+    n_tiles_h = ohp // t_oh
+    n_tiles_w = owp // t_ow
+    assert ihp >= ht_h.min_padded_extent(n_tiles_h), "input under-padded (h)"
+    assert iwp >= ht_w.min_padded_extent(n_tiles_w), "input under-padded (w)"
     n_ci = cip // t_ci
-    grid = (n, ohp // t_oh, owp // t_ow, cop // t_co, n_ci)
+    grid = (n, n_tiles_h, n_tiles_w, cop // t_co, n_ci)
 
     kernel = functools.partial(
         _deconv2d_kernel,
         plan=plan,
+        ht_h=ht_h,
+        ht_w=ht_w,
         t_oh=t_oh,
         t_ow=t_ow,
-        pad_l=pad_l,
         n_ci_tiles=n_ci,
+        activation=activation,
         out_dtype=x_padded.dtype,
     )
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec(
-                (1, ihp, iwp, t_ci),
-                lambda nb, oh, ow, co, ci: (nb, 0, 0, ci),
-            ),
+            x_halo_blockspec(ht_h, ht_w, t_ci),
             pl.BlockSpec(
                 (k, k, t_ci, t_co),
                 lambda nb, oh, ow, co, ci: (0, 0, ci, co),
@@ -141,11 +195,11 @@ def deconv2d_pallas_call(
         scratch_shapes=[
             pltpu.VMEM((t_oh // s, s, t_ow // s, s, t_co), jnp.float32)
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=COMPILER_PARAMS(
             dimension_semantics=(
                 "parallel", "parallel", "parallel", "parallel", "arbitrary",
             ),
         ),
         interpret=interpret,
-        name="deconv2d_reverse_loop",
+        name="deconv2d_halo_reverse_loop",
     )(x_padded, w, b)

@@ -1,8 +1,14 @@
-"""Jit'd public wrapper for the deconv2d Pallas kernel.
+"""Public wrapper for the deconv2d Pallas kernel.
 
-Resolves geometry (halo padding per core.tiling, channel padding to tile
-multiples), picks DSE-guided default tile factors, invokes the kernel, and
-crops the result.  On non-TPU backends the kernel runs in interpret mode."""
+`deconv2d` is a thin host-side wrapper: it resolves geometry and the tile
+assignment (explicit overrides > autotuner > clamped fallback heuristic)
+and dispatches into the jit'd `_deconv2d_jit`, which performs the halo /
+channel padding and invokes the kernel.  Tile resolution is pure host
+arithmetic over static shapes, so the wrapper also works while being
+traced inside an outer jit (timing refinement is skipped there — pass
+pre-resolved tiles, e.g. from serve.engine, for timed choices).
+
+On non-TPU backends the kernel runs in interpret mode."""
 from __future__ import annotations
 
 import functools
@@ -20,41 +26,26 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def default_tiles(oh: int, ow: int, ci: int, co: int, stride: int):
-    """DSE-guided defaults: stride-aligned spatial tiles close to the MXU
-    native 8x128 register shape; full output when small."""
-    t_oh = min(_round_up(oh, stride), _round_up(32, stride))
-    t_ow = min(_round_up(ow, stride), _round_up(32, stride))
-    t_ci = min(ci, 128)
-    t_co = min(co, 128)
-    return t_oh, t_ow, t_ci, t_co
-
-
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "stride", "padding", "t_oh", "t_ow", "t_ci", "t_co", "interpret",
+        "stride", "padding", "t_oh", "t_ow", "t_ci", "t_co", "activation",
+        "interpret",
     ),
 )
-def deconv2d(
+def _deconv2d_jit(
     x: jax.Array,
     w: jax.Array,
     b: Optional[jax.Array],
     stride: int,
     padding: int,
-    t_oh: Optional[int] = None,
-    t_ow: Optional[int] = None,
-    t_ci: Optional[int] = None,
-    t_co: Optional[int] = None,
-    interpret: Optional[bool] = None,
+    t_oh: int,
+    t_ow: int,
+    t_ci: int,
+    t_co: int,
+    activation: Optional[str],
+    interpret: bool,
 ) -> jax.Array:
-    """Transposed conv y = deconv(x, w) + b via the reverse-loop kernel.
-
-    x: (N, IH, IW, CI); w: (K, K, CI, CO); b: (CO,) or None.
-    Output: (N, OH, OW, CO), OH = (IH-1)*S + K - 2P.
-    """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     n, ih, iw, ci = x.shape
     k, _, _, co = w.shape
     s = stride
@@ -62,19 +53,14 @@ def deconv2d(
     ow = out_size(iw, k, s, padding)
     plan = make_phase_plan(k, s, padding)
 
-    dt_oh, dt_ow, dt_ci, dt_co = default_tiles(oh, ow, ci, co, s)
-    t_oh = t_oh or dt_oh
-    t_ow = t_ow or dt_ow
-    t_ci = t_ci or dt_ci
-    t_co = t_co or dt_co
-
     # pad output grid to tile multiples; phase grid rows per padded output
     ohp = _round_up(oh, t_oh)
     owp = _round_up(ow, t_ow)
     n_h_pad = ohp // s
     n_w_pad = owp // s
 
-    # halo padding (enhancement 3: all address arithmetic resolved up front)
+    # halo padding (enhancement 3: all address arithmetic resolved up front;
+    # the per-tile windows the kernel streams stay in bounds by construction)
     pad_l = plan.left_halo
     pad_rh = max(0, (n_h_pad - 1 + plan.delta_max) - (ih - 1))
     pad_rw = max(0, (n_w_pad - 1 + plan.delta_max) - (iw - 1))
@@ -92,7 +78,70 @@ def deconv2d(
         plan=plan,
         ohp=ohp, owp=owp,
         t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co,
-        pad_l=pad_l,
+        activation=activation,
         interpret=interpret,
     )
     return y[:, :oh, :ow, :co]
+
+
+def resolve_tiles(
+    x: jax.Array,
+    w: jax.Array,
+    stride: int,
+    padding: int,
+    t_oh: Optional[int],
+    t_ow: Optional[int],
+    t_ci: Optional[int],
+    t_co: Optional[int],
+    backend: str = "pallas",
+    autotune: bool = True,
+):
+    """Fill unspecified tile factors (shared by dense and sparse wrappers)."""
+    n, ih, iw, ci = x.shape
+    k, _, _, co = w.shape
+    if None not in (t_oh, t_ow, t_ci, t_co):
+        return t_oh, t_ow, t_ci, t_co
+    geom = DeconvGeometry(ih, iw, ci, co, k, stride, padding)
+    if autotune:
+        from ..autotune import choose_tiles
+
+        c = choose_tiles(geom, x.dtype, backend=backend)
+    else:
+        from ..autotune import fallback_tiles
+
+        c = fallback_tiles(geom, jnp.dtype(x.dtype).itemsize)
+    return (t_oh or c.t_oh, t_ow or c.t_ow, t_ci or c.t_ci, t_co or c.t_co)
+
+
+def deconv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array],
+    stride: int,
+    padding: int,
+    t_oh: Optional[int] = None,
+    t_ow: Optional[int] = None,
+    t_ci: Optional[int] = None,
+    t_co: Optional[int] = None,
+    activation: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    autotune: bool = True,
+) -> jax.Array:
+    """Transposed conv y = act(deconv(x, w) + b) via the reverse-loop kernel.
+
+    x: (N, IH, IW, CI); w: (K, K, CI, CO); b: (CO,) or None.
+    Output: (N, OH, OW, CO), OH = (IH-1)*S + K - 2P.
+    `activation` ("relu"/"tanh"/None) runs fused in the kernel's flush phase.
+    Unspecified tile factors come from the DSE autotuner cache/model
+    (`autotune=False` selects the clamped fixed heuristic instead).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    t_oh, t_ow, t_ci, t_co = resolve_tiles(
+        x, w, stride, padding, t_oh, t_ow, t_ci, t_co,
+        backend="pallas", autotune=autotune,
+    )
+    return _deconv2d_jit(
+        x, w, b, stride, padding, t_oh, t_ow, t_ci, t_co, activation,
+        interpret,
+    )

@@ -27,6 +27,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ...core.offsets import PhasePlan
+from ...core.tiling import HaloTile, halo_tile
+from ..deconv2d.kernel import COMPILER_PARAMS, apply_activation
 
 
 def build_schedule(block_tap_mask: np.ndarray):
@@ -58,26 +60,26 @@ def _sparse_kernel(
     valid_ref,     # (n_co, L)
     tap_ref,       # (n_co, L, K*K)
     # VMEM blocks
-    x_ref,         # (1, IHp, IWp, T_CI)
+    x_ref,         # (1, T_IH, T_IW, T_CI)  halo window
     w_ref,         # (K, K, T_CI, T_CO)
     b_ref,         # (1, T_CO)
     o_ref,         # (1, T_OH, T_OW, T_CO)
     acc_ref,       # (T_OH/S, S, T_OW/S, S, T_CO) f32
     *,
     plan: PhasePlan,
+    ht_h: HaloTile,
+    ht_w: HaloTile,
     t_oh: int,
     t_ow: int,
-    pad_l: int,
     n_sched: int,
     kernel_size: int,
+    activation,
     out_dtype,
 ):
     s = plan.stride
     th, tw = t_oh // s, t_ow // s
     l_idx = pl.program_id(4)
     co_t = pl.program_id(3)
-    oh_t = pl.program_id(1)
-    ow_t = pl.program_id(2)
 
     @pl.when(l_idx == 0)
     def _init():
@@ -99,9 +101,10 @@ def _sparse_kernel(
                         # static-schedule zero-skipping: the tap bit is a
                         # scalar in SMEM, so Mosaic predicates the matmul.
                         tap_live = tap_ref[co_t, l_idx, kh * kernel_size + kw] > 0
-                        r0 = oh_t * th + dh + pad_l
-                        c0 = ow_t * tw + dw + pad_l
-                        xs = x_ref[0, pl.ds(r0, th), pl.ds(c0, tw), :]
+                        # static halo-local rows (window follows the grid)
+                        r0 = ht_h.local_offset(dh)
+                        c0 = ht_w.local_offset(dw)
+                        xs = x_ref[0, r0:r0 + th, c0:c0 + tw, :]
                         contrib = jnp.dot(
                             xs.reshape(th * tw, t_ci),
                             w_ref[kh, kw],
@@ -112,7 +115,8 @@ def _sparse_kernel(
 
     @pl.when(l_idx == n_sched - 1)
     def _flush():
-        o_ref[0] = acc_ref[...].reshape(t_oh, t_ow, t_co).astype(out_dtype)
+        y = acc_ref[...].reshape(t_oh, t_ow, t_co)
+        o_ref[0] = apply_activation(y, activation).astype(out_dtype)
 
 
 def deconv2d_sparse_pallas_call(
@@ -130,35 +134,49 @@ def deconv2d_sparse_pallas_call(
     t_ow: int,
     t_ci: int,
     t_co: int,
-    pad_l: int,
+    activation=None,
     interpret: bool = False,
 ) -> jax.Array:
     n, ihp, iwp, cip = x_padded.shape
     k = w.shape[0]
     cop = w.shape[3]
+    s = plan.stride
+    ht_h = halo_tile(t_oh, k, s, plan.padding)
+    ht_w = halo_tile(t_ow, k, s, plan.padding)
+    n_tiles_h = ohp // t_oh
+    n_tiles_w = owp // t_ow
+    assert ihp >= ht_h.min_padded_extent(n_tiles_h), "input under-padded (h)"
+    assert iwp >= ht_w.min_padded_extent(n_tiles_w), "input under-padded (w)"
     n_sched = ci_idx.shape[1]
-    grid = (n, ohp // t_oh, owp // t_ow, cop // t_co, n_sched)
+    grid = (n, n_tiles_h, n_tiles_w, cop // t_co, n_sched)
 
     kernel = functools.partial(
         _sparse_kernel,
         plan=plan,
+        ht_h=ht_h,
+        ht_w=ht_w,
         t_oh=t_oh,
         t_ow=t_ow,
-        pad_l=pad_l,
         n_sched=n_sched,
         kernel_size=k,
+        activation=activation,
         out_dtype=x_padded.dtype,
     )
+    step_h, base_h = ht_h.step, ht_h.base
+    step_w, base_w = ht_w.step, ht_w.base
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec(
-                (1, ihp, iwp, t_ci),
-                # DMA indirection: stream only surviving CI slabs.
+                (1, ht_h.extent, ht_w.extent, t_ci),
+                # Eq. 5 halo window following the output grid, with DMA
+                # indirection on channels: only surviving CI slabs stream.
                 lambda nb, oh, ow, co, l, ci_idx, valid, taps: (
-                    nb, 0, 0, ci_idx[co, l],
+                    nb, oh * step_h + base_h, ow * step_w + base_w,
+                    ci_idx[co, l] * t_ci,
                 ),
+                indexing_mode=pl.unblocked,
             ),
             pl.BlockSpec(
                 (k, k, t_ci, t_co),
@@ -184,7 +202,7 @@ def deconv2d_sparse_pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, ohp, owp, cop), x_padded.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=COMPILER_PARAMS(
             dimension_semantics=(
                 "parallel", "parallel", "parallel", "parallel", "arbitrary",
             ),

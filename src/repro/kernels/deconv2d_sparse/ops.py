@@ -1,7 +1,9 @@
 """Jit'd wrapper for the block-sparse zero-skipping deconv kernel.
 
 The sparsity schedule is computed on the host from the (static) pruned
-weights — the paper's zero-skipping, hoisted to compile/load time."""
+weights — the paper's zero-skipping, hoisted to compile/load time.  Tile
+resolution shares `deconv2d.ops.resolve_tiles` (autotuner-backed, keyed
+under backend="pallas_sparse")."""
 from __future__ import annotations
 
 import functools
@@ -14,7 +16,7 @@ import numpy as np
 from ...core.offsets import make_phase_plan
 from ...core.sparsity import block_mask
 from ...core.tiling import out_size
-from ..deconv2d.ops import default_tiles, _round_up
+from ..deconv2d.ops import _round_up, resolve_tiles
 from .kernel import build_schedule, deconv2d_sparse_pallas_call
 
 
@@ -36,11 +38,11 @@ def make_sparse_plan(
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "t_oh", "t_ow", "t_ci", "t_co",
-                     "interpret"),
+                     "activation", "interpret"),
 )
 def _deconv2d_sparse_jit(
     x, w, b, ci_idx, valid, tap_mask,
-    stride, padding, t_oh, t_ow, t_ci, t_co, interpret,
+    stride, padding, t_oh, t_ow, t_ci, t_co, activation, interpret,
 ):
     n, ih, iw, ci = x.shape
     k, _, _, co = w.shape
@@ -65,7 +67,7 @@ def _deconv2d_sparse_jit(
         xp, wp, bp, ci_idx, valid, tap_mask,
         plan=plan, ohp=ohp, owp=owp,
         t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co,
-        pad_l=pad_l, interpret=interpret,
+        activation=activation, interpret=interpret,
     )
     return y[:, :oh, :ow, :co]
 
@@ -80,25 +82,33 @@ def deconv2d_sparse(
     t_ow: Optional[int] = None,
     t_ci: Optional[int] = None,
     t_co: Optional[int] = None,
+    activation: Optional[str] = None,
     interpret: Optional[bool] = None,
+    autotune: bool = True,
+    plan: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
 ) -> jax.Array:
-    """Sparse transposed conv; weights are expected pre-pruned (zeros)."""
+    """Sparse transposed conv; weights are expected pre-pruned (zeros).
+
+    ``plan`` is a precomputed `make_sparse_plan` result (built with the
+    same t_ci/t_co); serving paths pass it to avoid re-deriving the static
+    schedule — an O(weights) host computation — on every call."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    n, ih, iw, ci = x.shape
-    k, _, _, co = w.shape
-    oh = out_size(ih, k, stride, padding)
-    ow = out_size(iw, k, stride, padding)
-    dt_oh, dt_ow, dt_ci, dt_co = default_tiles(oh, ow, ci, co, stride)
-    t_oh = t_oh or dt_oh
-    t_ow = t_ow or dt_ow
-    t_ci = t_ci or dt_ci
-    t_co = t_co or dt_co
-    ci_idx, valid, tap_mask = make_sparse_plan(
-        np.asarray(w), stride, padding, t_ci, t_co
+    t_oh, t_ow, t_ci, t_co = resolve_tiles(
+        x, w, stride, padding, t_oh, t_ow, t_ci, t_co,
+        backend="pallas_sparse", autotune=autotune,
     )
+    if plan is None:
+        plan = make_sparse_plan(np.asarray(w), stride, padding, t_ci, t_co)
+    ci_idx, valid, tap_mask = plan
+    n_co = _round_up(w.shape[3], t_co) // t_co
+    if ci_idx.shape[0] != n_co:
+        raise ValueError(
+            f"sparse plan was built for {ci_idx.shape[0]} C_out tiles but the "
+            f"resolved t_co={t_co} yields {n_co}; rebuild the plan with the "
+            f"same channel tiles (or pass matching t_ci/t_co overrides)")
     return _deconv2d_sparse_jit(
         x, w, b, jnp.asarray(ci_idx), jnp.asarray(valid),
         jnp.asarray(tap_mask), stride, padding,
-        t_oh, t_ow, t_ci, t_co, interpret,
+        t_oh, t_ow, t_ci, t_co, activation, interpret,
     )

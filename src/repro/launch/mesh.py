@@ -12,19 +12,25 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # axis_types / AxisType only exist on newer jax; Auto is the default
+    # behavior there, so omitting it is equivalent where it is missing.
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for host-device tests (subprocesses set
     --xla_force_host_platform_device_count accordingly)."""
-    auto = jax.sharding.AxisType.Auto
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(auto,) * 2)
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))

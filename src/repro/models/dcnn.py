@@ -101,28 +101,51 @@ def generator_init(key, cfg: DcnnConfig):
     return p, s
 
 
+def _tile_kwargs(t) -> Dict[str, int]:
+    """A tile override is a square extent (int) or a full autotuner
+    TileChoice (kernels.autotune) carrying all four tile factors."""
+    if t is None:
+        return {}
+    if isinstance(t, int):
+        return {"t_oh": t, "t_ow": t}
+    return t.as_kwargs()
+
+
 def generator_apply(
     p, cfg: DcnnConfig, z: jax.Array, backend: str = "reverse_loop",
-    tile_overrides: Optional[Dict[int, int]] = None,
+    tile_overrides: Optional[Dict[int, Any]] = None,
+    sparse_plans: Optional[Dict[int, Any]] = None,
 ) -> jax.Array:
-    """z: (B, z_dim) -> images (B, H, W, C) in [-1, 1]."""
+    """z: (B, z_dim) -> images (B, H, W, C) in [-1, 1].
+
+    On the pallas backends each layer's bias + activation run fused in the
+    kernel's flush phase, so the chain never materializes a pre-activation
+    layer in HBM; the other backends apply the activation separately.
+    ``sparse_plans`` maps layer index -> precomputed `make_sparse_plan`
+    result for backend="pallas_sparse" (see serve.DcnnServeEngine).
+    """
     x = z.reshape(z.shape[0], 1, 1, cfg.z_dim).astype(cfg.jdtype)
     for i, l in enumerate(cfg.layers):
         w, b = p[f"l{i}"]["w"], p[f"l{i}"]["b"]
-        t = (tile_overrides or {}).get(i)
+        tiles = _tile_kwargs((tile_overrides or {}).get(i))
+        fused = backend in ("pallas", "pallas_sparse")
         if backend == "reverse_loop":
             x = deconv2d_reverse_loop(x, w, b, l.stride, l.padding)
         elif backend == "xla":
             x = deconv2d_zero_insertion(x, w, b, l.stride, l.padding)
         elif backend == "pallas":
             from ..kernels.deconv2d import deconv2d
-            x = deconv2d(x, w, b, l.stride, l.padding, t_oh=t, t_ow=t)
+            x = deconv2d(x, w, b, l.stride, l.padding,
+                         activation=l.activation, **tiles)
         elif backend == "pallas_sparse":
             from ..kernels.deconv2d_sparse import deconv2d_sparse
-            x = deconv2d_sparse(x, w, b, l.stride, l.padding, t_oh=t, t_ow=t)
+            x = deconv2d_sparse(x, w, b, l.stride, l.padding,
+                                activation=l.activation,
+                                plan=(sparse_plans or {}).get(i), **tiles)
         else:
             raise ValueError(backend)
-        x = jnp.tanh(x) if l.activation == "tanh" else jax.nn.relu(x)
+        if not fused:
+            x = jnp.tanh(x) if l.activation == "tanh" else jax.nn.relu(x)
     return x
 
 

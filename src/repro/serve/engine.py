@@ -93,14 +93,57 @@ class ServeEngine:
 
 
 class DcnnServeEngine:
-    """The paper's inference workload: batched image generation."""
+    """The paper's inference workload: batched image generation.
 
-    def __init__(self, cfg: DcnnConfig, params, backend: str = "pallas"):
+    The default path is the fused halo-streaming Pallas kernel chain
+    (bias + activation in the kernel epilogue, per-tile Eq. 5 input
+    streaming).  Tile factors are resolved once at engine construction —
+    eagerly, so the autotuner may refine with on-device timing
+    (``refine=True``) and persist the choices; the jitted generator then
+    sees only static, pre-resolved tiles."""
+
+    def __init__(self, cfg: DcnnConfig, params, backend: str = "pallas",
+                 autotune: bool = True, refine: bool = False):
         self.cfg = cfg
         self.params = params
         self.backend = backend
+        self.tile_choices = None
+        sparse_plans = None
+        if backend in ("pallas", "pallas_sparse"):
+            # resolve tiles once, eagerly: autotuned (cache/model/timed) or
+            # the clamped fixed heuristic when autotune=False — either way
+            # the jitted generator sees only pre-resolved static tiles.
+            from ..kernels.autotune import choose_tiles, fallback_tiles
+
+            if autotune:
+                self.tile_choices = {
+                    i: choose_tiles(g, cfg.jdtype, backend=backend,
+                                    refine=refine)
+                    for i, g in enumerate(cfg.geometries())
+                }
+            else:
+                self.tile_choices = {
+                    i: fallback_tiles(g, cfg.jdtype.itemsize)
+                    for i, g in enumerate(cfg.geometries())
+                }
+            if backend == "pallas_sparse":
+                # the zero-skip schedule is static per network: build it once
+                # from the concrete weights instead of on every generate()
+                from ..kernels.deconv2d_sparse import make_sparse_plan
+
+                sparse_plans = {
+                    i: make_sparse_plan(
+                        np.asarray(params[f"l{i}"]["w"]), l.stride, l.padding,
+                        self.tile_choices[i].t_ci, self.tile_choices[i].t_co)
+                    for i, l in enumerate(cfg.layers)
+                }
+        # with plans + tiles pre-resolved, no backend needs concrete weights
+        # at trace time, so the whole generator compiles as one function.
         self._fn = jax.jit(
-            lambda p, z: generator_apply(p, cfg, z, backend=backend))
+            lambda p, z: generator_apply(
+                p, cfg, z, backend=backend,
+                tile_overrides=self.tile_choices,
+                sparse_plans=sparse_plans))
 
     def generate(self, z: np.ndarray) -> np.ndarray:
         return np.asarray(self._fn(self.params, jnp.asarray(z)))

@@ -1,0 +1,120 @@
+"""DSE-driven tile autotuner: legality, VMEM clamping, cache behavior."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dse import TPU_V5E
+from repro.core.tiling import DeconvGeometry, kernel_vmem_bytes
+from repro.kernels import autotune
+from repro.kernels.autotune import (
+    TileChoice, choose_tiles, clear_cache, fallback_tiles,
+    legal_tile_candidates,
+)
+from repro.kernels.deconv2d import deconv2d, deconv2d_ref
+
+CELEBA_L2 = DeconvGeometry(4, 4, 1024, 512, 4, 2, 1)
+MNIST_L2 = DeconvGeometry(7, 7, 256, 128, 4, 2, 1)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    """Redirect the autotune cache into the test tmpdir."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.setattr(autotune, "_cache", None)
+    yield tmp_path / "at.json"
+    monkeypatch.setattr(autotune, "_cache", None)
+
+
+def _assert_legal(geom, c: TileChoice, dtype_bytes=4):
+    s = geom.stride
+    assert c.t_oh % s == 0 and c.t_ow % s == 0
+    assert c.t_oh > 0 and c.t_ow > 0 and c.t_ci > 0 and c.t_co > 0
+    fp = kernel_vmem_bytes(geom, c.t_oh, c.t_ow, c.t_ci, c.t_co, dtype_bytes)
+    assert fp <= TPU_V5E.onchip_bytes, f"tile {c} exceeds VMEM: {fp}"
+
+
+@pytest.mark.parametrize("geom", [CELEBA_L2, MNIST_L2,
+                                  DeconvGeometry(1, 1, 100, 1024, 4, 1, 0),
+                                  DeconvGeometry(32, 32, 128, 3, 4, 2, 1)])
+def test_chosen_tiles_legal_and_within_vmem(geom, tmp_cache):
+    """Acceptance: the chosen tile is legal (stride-aligned) and within the
+    VMEM cap, for every generator-layer geometry."""
+    c = choose_tiles(geom, jnp.float32, backend="pallas")
+    assert c.source in ("model", "fallback")
+    _assert_legal(geom, c)
+
+
+def test_candidates_all_fit_budget():
+    for (t_oh, t_ow, t_ci, t_co) in legal_tile_candidates(CELEBA_L2):
+        assert kernel_vmem_bytes(CELEBA_L2, t_oh, t_ow, t_ci, t_co, 4) \
+            <= TPU_V5E.onchip_bytes
+
+
+def test_fallback_clamps_large_ci_co_layers():
+    """Satellite bug: the fixed heuristic used to pick 32x32/128/128 blocks
+    regardless of footprint; a fat-channel layer must now be clamped."""
+    fat = DeconvGeometry(64, 64, 4096, 4096, 11, 1, 0)
+    c = fallback_tiles(fat, dtype_bytes=4)
+    _assert_legal(fat, c)
+    # and an unclamped 32x32/128/128 choice would NOT have fit
+    assert kernel_vmem_bytes(fat, 32, 32, 128, 128, 4) > TPU_V5E.onchip_bytes
+
+
+def test_cache_roundtrip_and_clear(tmp_cache):
+    c1 = choose_tiles(MNIST_L2, jnp.float32, backend="pallas")
+    assert c1.source != "cache"
+    assert tmp_cache.exists()
+    c2 = choose_tiles(MNIST_L2, jnp.float32, backend="pallas")
+    assert c2.source == "cache"
+    assert c2.as_kwargs() == c1.as_kwargs()
+    # distinct key per backend/dtype
+    c3 = choose_tiles(MNIST_L2, jnp.bfloat16, backend="pallas")
+    assert c3.source != "cache"
+    clear_cache()
+    assert not tmp_cache.exists()
+    c4 = choose_tiles(MNIST_L2, jnp.float32, backend="pallas")
+    assert c4.source != "cache"
+
+
+def test_refine_times_candidates_and_persists(tmp_cache):
+    g = DeconvGeometry(4, 4, 8, 8, 4, 2, 1)  # tiny: timing is cheap
+    c = choose_tiles(g, jnp.float32, backend="pallas", refine=True,
+                     refine_top_k=2)
+    assert c.source == "timed"
+    _assert_legal(g, c)
+    assert choose_tiles(g, jnp.float32, backend="pallas").source == "cache"
+
+
+def test_refine_not_suppressed_by_model_cache_entry(tmp_cache):
+    """A stored model choice must not satisfy a refine=True request — only
+    a timed entry does (the refinement then overwrites the model entry)."""
+    g = DeconvGeometry(4, 4, 8, 8, 4, 2, 1)
+    assert choose_tiles(g, jnp.float32, backend="pallas").source == "model"
+    c = choose_tiles(g, jnp.float32, backend="pallas", refine=True,
+                     refine_top_k=2)
+    assert c.source == "timed"
+    # and the timed entry now serves refine=True requests from cache
+    c2 = choose_tiles(g, jnp.float32, backend="pallas", refine=True)
+    assert c2.source == "cache"
+
+
+def test_sparse_plan_tile_mismatch_rejected(tmp_cache, rng):
+    from repro.kernels.deconv2d_sparse import deconv2d_sparse, make_sparse_plan
+
+    x = jnp.array(rng.randn(1, 7, 7, 16), jnp.float32)
+    w = (rng.randn(4, 4, 16, 32) * 0.1).astype(np.float32)
+    plan = make_sparse_plan(w, 2, 1, t_ci=8, t_co=8)  # 4 C_out tiles
+    with pytest.raises(ValueError, match="C_out tiles"):
+        deconv2d_sparse(x, jnp.asarray(w), None, 2, 1,
+                        t_ci=8, t_co=32, plan=plan)  # 1 C_out tile
+
+
+def test_autotuned_kernel_matches_reference(tmp_cache, rng):
+    """End to end: tiles resolved by the autotuner produce correct output."""
+    x = jnp.array(rng.randn(2, 7, 7, 16), jnp.float32)
+    w = jnp.array(rng.randn(4, 4, 16, 24) * 0.1, jnp.float32)
+    b = jnp.array(rng.randn(24), jnp.float32)
+    y = deconv2d(x, w, b, 2, 1)  # no explicit tiles -> autotuner
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(deconv2d_ref(x, w, b, 2, 1)),
+        rtol=1e-4, atol=1e-4)

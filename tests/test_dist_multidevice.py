@@ -79,8 +79,7 @@ def test_pipeline_parallel_matches_sequential():
         from jax.sharding import Mesh
         from repro.dist.pipeline import microbatch, pipeline_apply
 
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ("pod",))
         rng = np.random.RandomState(0)
         ws = jnp.array(rng.randn(4, 16, 16) * 0.3, jnp.float32)
 
@@ -139,7 +138,10 @@ def test_dryrun_cell_small_mesh_all_kinds():
             suite = dataclasses.replace(SHAPES[name], seq_len=seq,
                                         global_batch=gb)
             compiled = lower_cell(cfg, suite, mesh).compile()
-            assert compiled.cost_analysis().get("flops", 0) > 0
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):  # pre-0.5 jax: one dict/device
+                ca = ca[0]
+            assert ca.get("flops", 0) > 0
             print(name, "ok")
         print("OK")
     """, devices=4)

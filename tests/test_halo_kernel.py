@@ -1,0 +1,157 @@
+"""Halo-aware input tiling: BlockSpec geometry, parity vs the paper's
+Algorithm 1 oracle on awkward shapes, fused epilogue, traffic invariants."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.deconv import deconv2d_algorithm1_numpy
+from repro.core.tiling import (
+    DeconvGeometry, deconv_traffic, exact_input_extent, full_image_traffic,
+    halo_tile, kernel_vmem_bytes, out_size,
+)
+from repro.kernels.deconv2d import deconv2d, deconv2d_ref
+from repro.kernels.deconv2d.kernel import x_halo_blockspec
+
+
+# ---------------------------------------------------------------------------
+# halo-tile geometry
+# ---------------------------------------------------------------------------
+def test_halo_extent_is_exact_input_extent():
+    """The streamed window is exactly the max-over-tiles input span — no
+    over-read (the whole point of the tentpole)."""
+    for k, s, p in itertools.product(range(1, 8), range(1, 5), range(0, 4)):
+        if p >= k:
+            continue
+        for tm in (1, 2, 3, 5):
+            t = tm * s
+            ht = halo_tile(t, k, s, p)
+            assert ht.extent == exact_input_extent(t, k, s, p)
+            assert ht.step == t // s
+            assert ht.base >= 0  # host left-halo keeps every window in bounds
+            assert ht.overlap == ht.extent - ht.step
+
+
+def test_x_blockspec_shape_and_index_map():
+    """Acceptance: the x BlockSpec no longer spans the full padded input —
+    the per-program block is the halo window and its index map follows the
+    *output* grid (element offsets advancing by t_oh/S per tile)."""
+    k, s, p = 4, 2, 1
+    t_oh, t_ow, t_ci = 8, 8, 32
+    ht = halo_tile(t_oh, k, s, p)
+    bs = x_halo_blockspec(ht, ht, t_ci)
+    assert tuple(bs.block_shape) == (1, ht.extent, ht.extent, t_ci)
+    assert ht.extent == 6  # 8/2 + delta span 2: constant, image-independent
+    # index map follows the output-tile grid, not a constant (0, 0) base
+    for oh_t, ow_t, ci_t in [(0, 0, 0), (1, 0, 0), (2, 3, 1), (5, 7, 2)]:
+        got = bs.index_map(1, oh_t, ow_t, 0, ci_t)
+        assert got == (1, oh_t * ht.step + ht.base,
+                       ow_t * ht.step + ht.base, ci_t * t_ci)
+
+
+def test_windows_cover_padded_input_exactly():
+    """The last tile's window ends exactly at the padded extent the ops
+    wrapper produces (no slack, no out-of-bounds)."""
+    from repro.core.offsets import make_phase_plan
+
+    for k, s, p, ih, t in [(4, 2, 1, 7, 4), (5, 2, 2, 4, 4), (3, 3, 1, 8, 9),
+                           (7, 1, 0, 1, 7), (4, 2, 1, 16, 8)]:
+        plan = make_phase_plan(k, s, p)
+        oh = out_size(ih, k, s, p)
+        ohp = -(-oh // t) * t
+        n_h_pad = ohp // s
+        pad_l = plan.left_halo
+        pad_rh = max(0, (n_h_pad - 1 + plan.delta_max) - (ih - 1))
+        ihp = ih + pad_l + pad_rh
+        ht = halo_tile(t, k, s, p)
+        need = ht.min_padded_extent(ohp // t)
+        assert need <= ihp
+        # ...and is tight whenever padding was actually added on the right
+        if pad_rh > 0:
+            assert need == ihp
+
+
+# ---------------------------------------------------------------------------
+# parity vs Algorithm 1 on non-stride-aligned / non-square shapes
+# ---------------------------------------------------------------------------
+ALG1_GEOMS = [
+    # (ih, iw, ci, co, k, s, p, t) — OH=7, S=2, K=5: the CelebA-layer
+    # geometry from the issue (odd output, ragged last tile)
+    (4, 4, 6, 5, 5, 2, 2, 4),
+    # non-square input AND output (oh=7, ow=11)
+    (4, 6, 3, 4, 5, 2, 2, 4),
+    # non-square with non-dividing tile on both dims
+    (5, 3, 4, 7, 4, 2, 1, 6),
+    # stride-3 ragged edge
+    (4, 5, 2, 3, 5, 3, 1, 6),
+]
+
+
+@pytest.mark.parametrize("geom", ALG1_GEOMS)
+def test_kernel_matches_algorithm1(geom, rng):
+    ih, iw, ci, co, k, s, p, t = geom
+    x = rng.randn(2, ih, iw, ci).astype(np.float32)
+    w = (rng.randn(k, k, ci, co) * 0.1).astype(np.float32)
+    b = (rng.randn(co) * 0.1).astype(np.float32)
+    y = deconv2d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), s, p,
+                 t_oh=t, t_ow=t)
+    for n in range(x.shape[0]):
+        y_ref, _ = deconv2d_algorithm1_numpy(x[n], w, b, s, p)
+        np.testing.assert_allclose(
+            np.asarray(y[n]), y_ref.astype(np.float32), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("activation", ["relu", "tanh"])
+def test_fused_epilogue_matches_unfused(activation, rng):
+    x = jnp.array(rng.randn(2, 5, 7, 8), jnp.float32)
+    w = jnp.array(rng.randn(4, 4, 8, 12) * 0.1, jnp.float32)
+    b = jnp.array(rng.randn(12) * 0.1, jnp.float32)
+    y = deconv2d(x, w, b, 2, 1, activation=activation)
+    y_ref = deconv2d_ref(x, w, b, 2, 1)
+    y_ref = jnp.maximum(y_ref, 0) if activation == "relu" else jnp.tanh(y_ref)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_sparse_epilogue(rng):
+    from repro.kernels.deconv2d_sparse import deconv2d_sparse
+
+    x = jnp.array(rng.randn(1, 7, 7, 16), jnp.float32)
+    w = jnp.array(rng.randn(4, 4, 16, 16) * 0.1, jnp.float32)
+    b = jnp.array(rng.randn(16), jnp.float32)
+    y = deconv2d_sparse(x, w, b, 2, 1, t_ci=8, t_co=8, activation="relu")
+    y_ref = jnp.maximum(deconv2d_ref(x, w, b, 2, 1), 0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# traffic model invariants
+# ---------------------------------------------------------------------------
+def test_in_bytes_per_tile_independent_of_image_size():
+    """Acceptance: modeled HBM bytes/tile do not grow with the image."""
+    per_tile = set()
+    for in_hw in (8, 16, 32, 64, 128):
+        g = DeconvGeometry(in_hw, in_hw, 64, 16, 4, 2, 1)
+        t = deconv_traffic(g, 16, 16, 64, 16, 4)
+        per_tile.add((t.in_bytes_per_tile, t.w_bytes_per_tile,
+                      t.out_bytes_per_tile))
+    assert len(per_tile) == 1
+
+
+def test_halo_traffic_below_full_image_when_tiled():
+    g = DeconvGeometry(32, 32, 128, 3, 4, 2, 1)  # CelebA L5
+    halo = deconv_traffic(g, 32, 32, 128, 8, 4)
+    full = full_image_traffic(g, 32, 32, 128, 8, 4)
+    # 4 spatial tiles share halos instead of re-streaming the image
+    assert halo.total_bytes < full.total_bytes
+    assert halo.in_bytes_per_tile < full.in_bytes_per_tile
+
+
+def test_kernel_vmem_bytes_monotone_in_tiles():
+    g = DeconvGeometry(16, 16, 256, 256, 4, 2, 1)
+    small = kernel_vmem_bytes(g, 8, 8, 64, 64)
+    big = kernel_vmem_bytes(g, 32, 32, 256, 256)
+    assert small < big

@@ -1,54 +1,51 @@
-"""Properties of the paper's Eq. 3 offsets and the phase decomposition."""
+"""Properties of the paper's Eq. 3 offsets and the phase decomposition.
+
+Checked by exhaustive enumeration over the full small-geometry space
+(K in [1,9], S in [1,5], P in [0,6]) — no sampling, every case runs.
+"""
+import itertools
+
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
 from repro.core.offsets import (
     make_phase_plan, modulo_op_count_naive, modulo_op_count_ours,
     modulo_op_count_paper, offset, offset_table, taps_for_phase,
 )
 
-geom = st.tuples(
-    st.integers(1, 9),    # K
-    st.integers(1, 5),    # S
-    st.integers(0, 6),    # P
-)
+GEOMS = list(itertools.product(range(1, 10), range(1, 6), range(0, 7)))
 
 
-@given(geom)
-def test_offset_equals_phase_of_tap(g):
-    k_max, s, p = g
-    for k in range(k_max):
-        # Eq. 3 == (k - P) mod S: the offset IS the output phase of tap k
-        assert offset(k, s, p) == (k - p) % s
+def test_offset_equals_phase_of_tap():
+    for k_max, s, p in GEOMS:
+        for k in range(k_max):
+            # Eq. 3 == (k - P) mod S: the offset IS the output phase of tap k
+            assert offset(k, s, p) == (k - p) % s
 
 
-@given(geom)
-def test_offsets_in_range_and_table(g):
-    k_max, s, p = g
-    tab = offset_table(k_max, s, p)
-    assert tab.shape == (k_max,)
-    assert ((0 <= tab) & (tab < s)).all()
+def test_offsets_in_range_and_table():
+    for k_max, s, p in GEOMS:
+        tab = offset_table(k_max, s, p)
+        assert tab.shape == (k_max,)
+        assert ((0 <= tab) & (tab < s)).all()
 
 
-@given(geom)
-def test_taps_partition_kernel(g):
+def test_taps_partition_kernel():
     """Every tap contributes to exactly one phase; phases partition [0, K)."""
-    k_max, s, p = g
-    seen = []
-    for phase in range(s):
-        seen += taps_for_phase(phase, k_max, s, p)
-    assert sorted(seen) == list(range(k_max))
+    for k_max, s, p in GEOMS:
+        seen = []
+        for phase in range(s):
+            seen += taps_for_phase(phase, k_max, s, p)
+        assert sorted(seen) == list(range(k_max))
 
 
-@given(geom)
-def test_phase_plan_exact_division(g):
+def test_phase_plan_exact_division():
     """delta = (phase + P - k)/S is exact for all planned taps (the modulo
     arithmetic of Eq. 4 is fully resolved at trace time)."""
-    k_max, s, p = g
-    plan = make_phase_plan(k_max, s, p)
-    for phase, taps in plan.taps.items():
-        for k, delta in taps:
-            assert phase + p - k == delta * s
+    for k_max, s, p in GEOMS:
+        plan = make_phase_plan(k_max, s, p)
+        for phase, taps in plan.taps.items():
+            for k, delta in taps:
+                assert phase + p - k == delta * s
 
 
 def test_modulo_op_counts():

@@ -1,36 +1,35 @@
-"""Eq. 5 tile calculus properties."""
-from hypothesis import given, strategies as st
+"""Eq. 5 tile calculus properties (exhaustive small-geometry enumeration)."""
+import itertools
 
 from repro.core.tiling import (
     DeconvGeometry, exact_input_extent, in_size_for, input_tile_extent,
     legal_tile_factors, out_size, vmem_footprint,
 )
 
-geom = st.tuples(
-    st.integers(1, 8),    # K
-    st.integers(1, 4),    # S
-    st.integers(0, 5),    # P
-    st.integers(1, 16),   # T_OH multiplier
-)
+GEOMS = list(itertools.product(
+    range(1, 9),    # K
+    range(1, 5),    # S
+    range(0, 6),    # P
+    range(1, 17),   # T_OH multiplier
+))
 
 
-@given(geom)
-def test_eq5_bounds_exact_extent(g):
-    k, s, p, tm = g
-    if p >= k:  # degenerate geometry (output smaller than padding)
-        return
-    t_oh = tm * s  # stride-aligned tiles, as in the kernel
-    exact = exact_input_extent(t_oh, k, s, p)
-    bound = input_tile_extent(t_oh, k, s)
-    assert exact <= bound + 1  # Eq. 5 (+1 covers the P=0 corner the paper
-    #                            absorbs into its ceil; see core/tiling.py)
+def test_eq5_bounds_exact_extent():
+    for k, s, p, tm in GEOMS:
+        if p >= k:  # degenerate geometry (output smaller than padding)
+            continue
+        t_oh = tm * s  # stride-aligned tiles, as in the kernel
+        exact = exact_input_extent(t_oh, k, s, p)
+        bound = input_tile_extent(t_oh, k, s)
+        assert exact <= bound + 1  # Eq. 5 (+1 covers the P=0 corner the
+        #                            paper absorbs into its ceil)
 
 
-@given(st.integers(1, 32), st.integers(1, 8), st.integers(1, 4))
-def test_out_in_roundtrip(i, k, s):
-    p = min(k - 1, 1)
-    o = out_size(i, k, s, p)
-    assert in_size_for(o, k, s, p) == i
+def test_out_in_roundtrip():
+    for i, k, s in itertools.product(range(1, 33), range(1, 9), range(1, 5)):
+        p = min(k - 1, 1)
+        o = out_size(i, k, s, p)
+        assert in_size_for(o, k, s, p) == i
 
 
 def test_legal_tiles_stride_aligned():
