@@ -20,10 +20,10 @@ import numpy as np
 
 from repro.analysis.hlo import deconv_traffic_report, measured_bytes
 from repro.core.deconv import deconv2d_reverse_loop, deconv2d_zero_insertion
-from repro.core.dse import TPU_V5E, layer_dse
+from repro.core.dse import TPU_V5E, layer_dse, tile_attainable
 from repro.kernels.autotune import choose_tiles, fallback_tiles
 from repro.kernels.deconv2d import deconv2d
-from repro.models.dcnn import CELEBA_DCNN, MNIST_DCNN
+from repro.models.dcnn import CELEBA_DCNN, MNIST_DCNN, generator_init
 
 from .common import time_fn
 
@@ -189,10 +189,107 @@ def autotune_rows(reps: int = 10, batch: int = 2):
     return rows
 
 
-def write_json(path: str, table2, traffic, autotune, scaling):
+def batch_sweep_rows(batches=(8, 64), reps: int = 3):
+    """Tentpole acceptance: batch-fused kernel (autotuned t_n) vs the
+    per-image-grid kernel (t_n=1, same spatial/channel tiles) on the
+    fat-channel first generator layers — throughput, p50/p99 latency and
+    run-to-run CV (the paper's Table III variation methodology), with the
+    modeled roofline attainable recorded alongside.  On CPU CI the kernels
+    run in interpret mode, so the measured speedup is a proxy (fewer grid
+    programs); the modeled numbers carry the MXU-fill/weight-amortization
+    story."""
+    key = jax.random.PRNGKey(0)
+    layers = [("dcnn-celeba", "L1", CELEBA_DCNN.geometries()[0]),
+              ("dcnn-mnist", "L1", MNIST_DCNN.geometries()[0])]
+    rows = []
+    for net, lname, g in layers:
+        for batch in batches:
+            x = jax.random.normal(key, (batch, g.in_h, g.in_w, g.c_in),
+                                  jnp.float32)
+            w = jax.random.normal(key, (g.kernel, g.kernel, g.c_in, g.c_out),
+                                  jnp.float32) * 0.1
+            b = jnp.zeros((g.c_out,), jnp.float32)
+            fused = choose_tiles(g, jnp.float32, backend="pallas",
+                                 batch=batch)
+            per_image = dict(fused.as_kwargs(), t_n=1)
+
+            def f(x, w, b, kw):
+                return deconv2d(x, w, b, g.stride, g.padding, **kw)
+
+            m_pi, s_pi, t_pi = time_fn(f, x, w, b, per_image, reps=reps)
+            m_bf, s_bf, t_bf = time_fn(f, x, w, b, fused.as_kwargs(),
+                                       reps=reps)
+            att_pi = tile_attainable(g, fused.t_oh, fused.t_ow, fused.t_ci,
+                                     fused.t_co, TPU_V5E, t_n=1, batch=batch)
+            att_bf = tile_attainable(g, fused.t_oh, fused.t_ow, fused.t_ci,
+                                     fused.t_co, TPU_V5E, t_n=fused.t_n,
+                                     batch=batch)
+            rows.append({
+                "net": net, "layer": lname, "batch": batch,
+                "tiles": fused.as_kwargs(),
+                "per_image_us": m_pi * 1e6,
+                "fused_us": m_bf * 1e6,
+                "per_image_cv": s_pi / max(m_pi, 1e-12),
+                "fused_cv": s_bf / max(m_bf, 1e-12),
+                "per_image_p50_us": float(np.percentile(t_pi, 50)) * 1e6,
+                "per_image_p99_us": float(np.percentile(t_pi, 99)) * 1e6,
+                "fused_p50_us": float(np.percentile(t_bf, 50)) * 1e6,
+                "fused_p99_us": float(np.percentile(t_bf, 99)) * 1e6,
+                "per_image_img_s": batch / m_pi,
+                "fused_img_s": batch / m_bf,
+                "speedup": m_pi / max(m_bf, 1e-12),
+                "modeled_per_image_gops": att_pi.attainable_ops / 1e9,
+                "modeled_fused_gops": att_bf.attainable_ops / 1e9,
+                "modeled_speedup": att_bf.attainable_ops
+                / max(att_pi.attainable_ops, 1.0),
+            })
+    return rows
+
+
+def serving_sweep_rows(reps: int = 3, stream=(3, 5, 1, 8, 2, 6, 4, 7)):
+    """Bucketed serving engine on the MNIST generator: a mixed-size request
+    stream through `DcnnServeEngine.submit/collect`, reporting end-to-end
+    throughput, latency percentiles and the compile count (the
+    no-per-request-recompilation acceptance: <= len(buckets))."""
+    import time as _time
+
+    from repro.serve.engine import DcnnServeEngine
+
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+    eng = DcnnServeEngine(MNIST_DCNN, params, backend="pallas",
+                          buckets=(1, 2, 4, 8), warmup=True)
+    rng = np.random.RandomState(0)
+    lat = []
+    n_imgs = 0
+    for _ in range(reps):
+        for n in stream:
+            z = rng.randn(n, MNIST_DCNN.z_dim).astype(np.float32)
+            t0 = _time.perf_counter()
+            rid = eng.submit(z)
+            eng.collect(rid)
+            lat.append(_time.perf_counter() - t0)
+            n_imgs += n
+    lat = np.asarray(lat)
+    return {
+        "stream": list(stream), "reps": reps,
+        "buckets": list(eng.buckets),
+        "compiles": eng.total_compiles,
+        "trace_counts": {str(k): v for k, v in eng.trace_counts.items()},
+        "throughput_img_s": n_imgs / lat.sum(),
+        "p50_ms": float(np.percentile(lat, 50)) * 1e3,
+        "p99_ms": float(np.percentile(lat, 99)) * 1e3,
+        "cv": float(lat.std() / lat.mean()),
+        "padded_images": eng.stats["padded_images"],
+    }
+
+
+def write_json(path: str, table2, traffic, autotune, scaling,
+               batch_sweep=None, serving=None):
     with open(path, "w") as f:
         json.dump({"table2": table2, "traffic": traffic,
-                   "autotune": autotune, "scaling": scaling},
+                   "autotune": autotune, "scaling": scaling,
+                   "batch_sweep": batch_sweep or [],
+                   "serving": serving or {}},
                   f, indent=1, default=float)
     print(f"[bench_deconv] wrote {path}")
 
@@ -224,6 +321,31 @@ def print_autotune(rows):
               f"{tt['t_oh']}x{tt['t_ow']}/{tt['t_ci']}/{tt['t_co']}{note}")
 
 
+def print_batch_sweep(rows):
+    print("# batch-fused kernel (autotuned t_n) vs per-image grid (t_n=1) — "
+          "interpret-mode proxy on CPU; modeled TPU roofline alongside")
+    print(f"{'net':13s} {'layer':5s} {'batch':>5s} {'t_n':>4s} "
+          f"{'per-img img/s':>13s} {'fused img/s':>11s} {'speedup':>8s} "
+          f"{'modeled':>8s}")
+    for r in rows:
+        print(f"{r['net']:13s} {r['layer']:5s} {r['batch']:5d} "
+              f"{r['tiles']['t_n']:4d} {r['per_image_img_s']:13.1f} "
+              f"{r['fused_img_s']:11.1f} {r['speedup']:7.2f}x "
+              f"{r['modeled_speedup']:7.2f}x")
+
+
+def print_serving(row):
+    if not row:
+        return
+    print("# bucketed serving engine (MNIST generator, pallas backend): "
+          "mixed-size submit/collect stream")
+    print(f"buckets={row['buckets']} compiles={row['compiles']} "
+          f"(<= {len(row['buckets'])}) "
+          f"throughput={row['throughput_img_s']:.1f} img/s "
+          f"p50={row['p50_ms']:.1f} ms p99={row['p99_ms']:.1f} ms "
+          f"cv={row['cv']:.3f} padded={row['padded_images']}")
+
+
 def print_scaling(rows):
     print("# Eq. 5 property: input bytes/tile vs image size at a fixed "
           "32x32/128/8 tiling (CelebA-L5 layer type)")
@@ -241,12 +363,18 @@ def main(reps: int = 50, smoke: bool = False,
         t_rows = traffic_rows(batch=1, measure=True)
         s_rows = scaling_rows()
         a_rows = autotune_rows(reps=3, batch=1)
+        b_rows = batch_sweep_rows(batches=(8, 64), reps=3)
+        serving = serving_sweep_rows(reps=1)
         print_traffic(t_rows)
         print()
         print_scaling(s_rows)
         print()
         print_autotune(a_rows)
-        write_json(json_path, [], t_rows, a_rows, s_rows)
+        print()
+        print_batch_sweep(b_rows)
+        print()
+        print_serving(serving)
+        write_json(json_path, [], t_rows, a_rows, s_rows, b_rows, serving)
         return []
     rows = run(reps)
     print("# Table II analogue: GOps/s mean (cv) per layer; cv = run-to-run "
@@ -272,7 +400,13 @@ def main(reps: int = 50, smoke: bool = False,
     print()
     a_rows = autotune_rows(reps=max(3, reps // 5))
     print_autotune(a_rows)
-    write_json(json_path, rows, t_rows, a_rows, s_rows)
+    print()
+    b_rows = batch_sweep_rows(batches=(8, 64), reps=max(3, reps // 5))
+    print_batch_sweep(b_rows)
+    print()
+    serving = serving_sweep_rows(reps=3)
+    print_serving(serving)
+    write_json(json_path, rows, t_rows, a_rows, s_rows, b_rows, serving)
     return rows
 
 

@@ -13,6 +13,7 @@ from .sparsity import block_mask, magnitude_prune, prune_tree, zero_skip_stats
 from .tiling import (
     DeconvGeometry,
     deconv_traffic,
+    deconv_traffic_batched,
     exact_input_extent,
     full_image_traffic,
     halo_tile,
@@ -47,6 +48,7 @@ __all__ = [
     "tile_attainable",
     "DeconvGeometry",
     "deconv_traffic",
+    "deconv_traffic_batched",
     "exact_input_extent",
     "full_image_traffic",
     "halo_tile",

@@ -19,8 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .tiling import (DeconvGeometry, deconv_traffic, legal_tile_factors,
-                     vmem_footprint)
+from .tiling import (DeconvGeometry, deconv_traffic_batched,
+                     legal_tile_factors, vmem_footprint)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,18 +125,27 @@ def tile_attainable(
     t_ci: int,
     t_co: int,
     device: Device = TPU_V5E,
+    t_n: int = 1,
+    batch: Optional[int] = None,
 ) -> DsePoint:
     """Roofline-attainable throughput for one *full* tile choice.
 
-    Generalizes `layer_dse` (square spatial, fixed co_tile) to the four
+    Generalizes `layer_dse` (square spatial, fixed co_tile) to the five
     tile factors the Pallas kernel actually takes — this is the scoring
     function the autotuner (kernels/autotune.py) ranks candidates by.
-    CTC uses the halo-streaming traffic model: the kernel re-streams one
-    Eq. 5 window + one weight slab per CI step of every output tile."""
-    traffic = deconv_traffic(geom, t_oh, t_ow, t_ci, t_co,
-                             device.dtype_bytes)
-    ctc = geom.ops / max(traffic.total_bytes, 1)
-    attainable = min(device.peak_ops, ctc * device.bandwidth)
+    CTC uses the halo-streaming traffic model: the kernel re-streams
+    ``t_n`` Eq. 5 windows + ONE weight slab per CI step of every output
+    tile, so batch tiling amortizes weight traffic AND fills the MXU row
+    dimension (``t_n * T_OH/S * T_OW/S`` contraction rows).  The MXU-fill
+    factor scales the compute roofline: a tap matmul with fewer than 128
+    rows leaves the systolic array proportionally idle."""
+    batch = t_n if batch is None else batch
+    traffic = deconv_traffic_batched(geom, batch, t_n, t_oh, t_ow, t_ci,
+                                     t_co, device.dtype_bytes)
+    ctc = batch * geom.ops / max(traffic.total_bytes, 1)
+    rows = t_n * (t_oh // geom.stride) * (t_ow // geom.stride)
+    mxu_fill = min(1.0, rows / 128.0)
+    attainable = min(device.peak_ops * mxu_fill, ctc * device.bandwidth)
     from .tiling import kernel_vmem_bytes
 
     return DsePoint(
@@ -144,8 +153,8 @@ def tile_attainable(
         ctc=ctc,
         attainable_ops=attainable,
         vmem_bytes=kernel_vmem_bytes(geom, t_oh, t_ow, t_ci, t_co,
-                                     device.dtype_bytes),
-        bandwidth_bound=ctc * device.bandwidth < device.peak_ops,
+                                     device.dtype_bytes, t_n=t_n),
+        bandwidth_bound=ctc * device.bandwidth < device.peak_ops * mxu_fill,
     )
 
 

@@ -119,18 +119,21 @@ def kernel_vmem_bytes(
     t_ci: int,
     t_co: int,
     dtype_bytes: int = 4,
+    t_n: int = 1,
 ) -> int:
     """Precise VMEM footprint of the halo-streaming Pallas kernel.
 
     Input/weight/bias blocks are double-buffered by the Mosaic pipeline
-    (x2); the f32 accumulator scratch and the output block are single."""
+    (x2); the f32 accumulator scratch and the output block are single.
+    ``t_n`` is the batch tile: each grid program owns ``t_n`` images' halo
+    windows / output blocks (the weight slab is batch-stationary)."""
     ht_h = halo_tile(t_oh, geom.kernel, geom.stride, geom.padding)
     ht_w = halo_tile(t_ow, geom.kernel, geom.stride, geom.padding)
-    x_bytes = ht_h.extent * ht_w.extent * t_ci * dtype_bytes
+    x_bytes = t_n * ht_h.extent * ht_w.extent * t_ci * dtype_bytes
     w_bytes = geom.kernel * geom.kernel * t_ci * t_co * dtype_bytes
     b_bytes = t_co * dtype_bytes
-    y_bytes = t_oh * t_ow * t_co * dtype_bytes
-    acc_bytes = t_oh * t_ow * t_co * 4
+    y_bytes = t_n * t_oh * t_ow * t_co * dtype_bytes
+    acc_bytes = t_n * t_oh * t_ow * t_co * 4
     return 2 * (x_bytes + w_bytes + b_bytes) + y_bytes + acc_bytes
 
 
@@ -222,6 +225,45 @@ def deconv_traffic(
     w_b = geom.kernel * geom.kernel * t_ci * t_co * dtype_bytes
     out_b = t_oh * t_ow * t_co * dtype_bytes
     n_tiles = n_h * n_w * n_co
+    total = n_tiles * (n_ci * (in_b + w_b) + out_b)
+    return DeconvTraffic(
+        n_tiles=n_tiles,
+        n_ci_steps=n_ci,
+        in_bytes_per_tile=in_b,
+        w_bytes_per_tile=w_b,
+        out_bytes_per_tile=out_b,
+        total_bytes=total,
+    )
+
+
+def deconv_traffic_batched(
+    geom: DeconvGeometry,
+    batch: int,
+    t_n: int,
+    t_oh: int,
+    t_ow: int,
+    t_ci: int,
+    t_co: int,
+    dtype_bytes: int = 4,
+) -> DeconvTraffic:
+    """HBM bytes moved for a *batch* under the batch-fused kernel.
+
+    The batch dimension is tiled by ``t_n`` (batch folded into the MXU row
+    dimension): each grid program streams ``t_n`` halo windows but only ONE
+    weight slab per CI step, so weight traffic per image falls by ``t_n`` —
+    the spatio-temporal amortization that makes the batched path win on the
+    fat-channel early layers."""
+    ht_h = halo_tile(t_oh, geom.kernel, geom.stride, geom.padding)
+    ht_w = halo_tile(t_ow, geom.kernel, geom.stride, geom.padding)
+    n_n = -(-batch // t_n)
+    n_h = -(-geom.out_h // t_oh)
+    n_w = -(-geom.out_w // t_ow)
+    n_co = -(-geom.c_out // t_co)
+    n_ci = -(-geom.c_in // t_ci)
+    in_b = t_n * ht_h.extent * ht_w.extent * t_ci * dtype_bytes
+    w_b = geom.kernel * geom.kernel * t_ci * t_co * dtype_bytes
+    out_b = t_n * t_oh * t_ow * t_co * dtype_bytes
+    n_tiles = n_n * n_h * n_w * n_co
     total = n_tiles * (n_ci * (in_b + w_b) + out_b)
     return DeconvTraffic(
         n_tiles=n_tiles,

@@ -34,9 +34,15 @@ from ..core.dse import TPU_V5E, Device, tile_attainable
 from ..core.tiling import DeconvGeometry, kernel_vmem_bytes
 
 _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
-_CACHE_VERSION = 1
+# v2: the batch tile t_n joined the schema — both the key format and the
+# stored entry gained a field, so v1 entries (4-tuple tiles, no batch in
+# the key) must never be served.  The version is embedded in every key and
+# `_valid_entry` drops anything that does not carry the full 5-tuple.
+_CACHE_VERSION = 2
 _lock = threading.Lock()
 _cache: Optional[Dict[str, dict]] = None
+
+_TILE_FIELDS = ("t_oh", "t_ow", "t_ci", "t_co", "t_n")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,13 +53,14 @@ class TileChoice:
     t_ow: int
     t_ci: int
     t_co: int
+    t_n: int = 1              # batch tile (images per grid program)
     source: str = "model"     # cache | model | timed | fallback
     attainable_ops: float = 0.0
     vmem_bytes: int = 0
 
     def as_kwargs(self) -> Dict[str, int]:
         return {"t_oh": self.t_oh, "t_ow": self.t_ow,
-                "t_ci": self.t_ci, "t_co": self.t_co}
+                "t_ci": self.t_ci, "t_co": self.t_co, "t_n": self.t_n}
 
 
 def _round_up(x: int, m: int) -> int:
@@ -69,16 +76,26 @@ def cache_path() -> pathlib.Path:
 
 
 def cache_key(geom: DeconvGeometry, dtype, backend: str,
-              device: Device = TPU_V5E) -> str:
+              device: Device = TPU_V5E, batch: int = 1) -> str:
     d = np.dtype(dtype).name
     # the platform and the modeled device are part of the key: refine=True
     # timings taken in CPU interpret mode must never be served as
     # authoritative on TPU, and a choice fitted to one device's VMEM
-    # budget/roofline must not leak to another's
+    # budget/roofline must not leak to another's.  The batch joins the key
+    # because t_n is chosen against it (one entry per serving bucket).
     plat = jax.default_backend()
     return (f"v{_CACHE_VERSION}|{plat}|{device.name}|{backend}|{d}|"
-            f"i{geom.in_h}x{geom.in_w}|c{geom.c_in}>{geom.c_out}|"
+            f"n{batch}|i{geom.in_h}x{geom.in_w}|c{geom.c_in}>{geom.c_out}|"
             f"k{geom.kernel}s{geom.stride}p{geom.padding}")
+
+
+def _valid_entry(v) -> bool:
+    """A cache entry must carry the full current tile schema.  Entries from
+    an older schema (e.g. v1's 4-tuple, before t_n existed) or corrupted
+    by hand-editing are dropped instead of being served as stale tiles."""
+    return (isinstance(v, dict)
+            and all(isinstance(v.get(f), int) and v[f] > 0
+                    for f in _TILE_FIELDS))
 
 
 def _load_cache() -> Dict[str, dict]:
@@ -86,9 +103,12 @@ def _load_cache() -> Dict[str, dict]:
     if _cache is None:
         path = cache_path()
         try:
-            _cache = json.loads(path.read_text())
+            raw = json.loads(path.read_text())
         except (OSError, ValueError):
-            _cache = {}
+            raw = {}
+        if not isinstance(raw, dict):  # corrupt top-level: recover empty
+            raw = {}
+        _cache = {k: v for k, v in raw.items() if _valid_entry(v)}
     return _cache
 
 
@@ -127,49 +147,70 @@ def _channel_tile_options(c: int) -> List[int]:
     return sorted({min(cp, v) for v in (32, 64, 128)})
 
 
+def _batch_tile_options(batch: int, cap: int = 64) -> List[int]:
+    """Batch-tile candidates: powers of two up to (never beyond) the
+    batch, plus the batch itself so non-power-of-two batches can run as a
+    single grid step.  t_n > batch is never enumerated — it would be
+    scored with an MXU-row fill the real (clamped) kernel can't reach."""
+    hi = min(batch, cap)
+    opts = {1, hi}
+    t = 1
+    while t * 2 <= hi:
+        t *= 2
+        opts.add(t)
+    return sorted(opts)
+
+
 def legal_tile_candidates(
     geom: DeconvGeometry,
     dtype_bytes: int = 4,
     vmem_budget: int = TPU_V5E.onchip_bytes,
     max_spatial: int = 64,
-) -> List[Tuple[int, int, int, int]]:
-    """All (t_oh, t_ow, t_ci, t_co) with stride-aligned square spatial tiles
-    that fit the on-chip budget (paper Fig. 5 'legal solutions')."""
+    batch: int = 1,
+) -> List[Tuple[int, int, int, int, int]]:
+    """All (t_oh, t_ow, t_ci, t_co, t_n) with stride-aligned square spatial
+    tiles that fit the on-chip budget (paper Fig. 5 'legal solutions'),
+    jointly enumerated with the batch tile."""
     s = geom.stride
     oh_cap = _round_up(min(geom.out_h, max_spatial), s)
     spatial = list(range(s, oh_cap + 1, s))
     # the full-output tile (single spatial program) is always a candidate,
     # even beyond max_spatial — the VMEM filter below still applies
     spatial.append(_round_up(geom.out_h, s))
-    out: List[Tuple[int, int, int, int]] = []
+    out: List[Tuple[int, int, int, int, int]] = []
     for t in sorted(set(spatial)):
         for t_ci in _channel_tile_options(geom.c_in):
             for t_co in _channel_tile_options(geom.c_out):
-                fp = kernel_vmem_bytes(geom, t, t, t_ci, t_co, dtype_bytes)
-                if fp <= vmem_budget:
-                    out.append((t, t, t_ci, t_co))
+                for t_n in _batch_tile_options(batch):
+                    fp = kernel_vmem_bytes(geom, t, t, t_ci, t_co,
+                                           dtype_bytes, t_n=t_n)
+                    if fp <= vmem_budget:
+                        out.append((t, t, t_ci, t_co, t_n))
     return out
 
 
 def rank_candidates(
     geom: DeconvGeometry,
-    candidates: List[Tuple[int, int, int, int]],
+    candidates: List[Tuple[int, int, int, int, int]],
     device: Device = TPU_V5E,
+    batch: int = 1,
 ) -> List[TileChoice]:
     """Sort by modeled attainable throughput (desc), tie-breaking toward
     higher CTC then larger tiles (fewer grid programs)."""
     scored = []
-    for (t_oh, t_ow, t_ci, t_co) in candidates:
-        pt = tile_attainable(geom, t_oh, t_ow, t_ci, t_co, device)
+    for (t_oh, t_ow, t_ci, t_co, t_n) in candidates:
+        pt = tile_attainable(geom, t_oh, t_ow, t_ci, t_co, device,
+                             t_n=t_n, batch=batch)
         scored.append(TileChoice(
-            t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co,
+            t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co, t_n=t_n,
             source="model",
             attainable_ops=pt.attainable_ops,
             vmem_bytes=pt.vmem_bytes,
         ))
     return sorted(
         scored,
-        key=lambda c: (-c.attainable_ops, -c.t_oh * c.t_ow, -c.t_ci * c.t_co),
+        key=lambda c: (-c.attainable_ops, -c.t_n * c.t_oh * c.t_ow,
+                       -c.t_ci * c.t_co),
     )
 
 
@@ -177,20 +218,25 @@ def fallback_tiles(
     geom: DeconvGeometry,
     dtype_bytes: int = 4,
     vmem_budget: int = TPU_V5E.onchip_bytes,
+    batch: int = 1,
 ) -> TileChoice:
     """The old fixed heuristic (~32x32 spatial, 128-channel tiles), now
     clamped through `kernel_vmem_bytes` so large CI x CO layers can no
     longer blow the VMEM budget: shrink channels first (halving), then the
-    spatial tile, until the footprint fits."""
+    spatial tile, until the footprint fits.  The batch tile grows (powers
+    of two, within the batch and the budget) until the tap matmuls reach
+    ~128 contraction rows — a full MXU column load."""
     s = geom.stride
     t_oh = min(_round_up(geom.out_h, s), _round_up(32, s))
     t_ow = min(_round_up(geom.out_w, s), _round_up(32, s))
     t_ci = min(_round_up(geom.c_in, 8), 128)
     t_co = min(_round_up(geom.c_out, 8), 128)
+    t_n = 1
 
-    def fits() -> bool:
+    def fits(tn=None) -> bool:
         return kernel_vmem_bytes(
-            geom, t_oh, t_ow, t_ci, t_co, dtype_bytes) <= vmem_budget
+            geom, t_oh, t_ow, t_ci, t_co, dtype_bytes,
+            t_n=(t_n if tn is None else tn)) <= vmem_budget
 
     while not fits():
         if t_ci > 8:
@@ -202,10 +248,15 @@ def fallback_tiles(
             t_ow = max(s, _round_up(t_ow // 2, s))
         else:
             break  # smallest legal tile; nothing left to shrink
+    rows_per_img = (t_oh // s) * (t_ow // s)
+    while (t_n * 2 <= batch and t_n * rows_per_img < 128
+           and fits(tn=t_n * 2)):
+        t_n *= 2
     return TileChoice(
-        t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co, source="fallback",
+        t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co, t_n=t_n,
+        source="fallback",
         vmem_bytes=kernel_vmem_bytes(geom, t_oh, t_ow, t_ci, t_co,
-                                     dtype_bytes),
+                                     dtype_bytes, t_n=t_n),
     )
 
 
@@ -218,6 +269,7 @@ def _time_candidate(
     dtype,
     backend: str,
     reps: int = 3,
+    batch: int = 1,
 ) -> float:
     """Median wall-clock of the real kernel at this tile choice (seconds).
 
@@ -230,7 +282,8 @@ def _time_candidate(
 
     key = jax.random.PRNGKey(0)
     kx, kw = jax.random.split(key)
-    x = jax.random.normal(kx, (1, geom.in_h, geom.in_w, geom.c_in), dtype)
+    x = jax.random.normal(kx, (batch, geom.in_h, geom.in_w, geom.c_in),
+                          dtype)
     w = (jax.random.normal(
         kw, (geom.kernel, geom.kernel, geom.c_in, geom.c_out), dtype) * 0.1
     ).astype(dtype)
@@ -258,14 +311,18 @@ def choose_tiles(
     refine_top_k: int = 3,
     device: Device = TPU_V5E,
     use_cache: bool = True,
+    batch: int = 1,
 ) -> TileChoice:
     """Resolve the tile assignment for one deconv layer.
 
+    ``batch`` is the (bucketed) serving batch the choice is fitted to: the
+    DSE enumerates the batch tile t_n jointly with the spatial/channel
+    tiles, trading MXU row fill + weight amortization against VMEM.
     ``refine=True`` times the top-`refine_top_k` model-ranked candidates on
     the current backend and keeps the fastest (then persists it, so the
-    timing cost is paid once per (geometry, dtype, backend))."""
+    timing cost is paid once per (geometry, dtype, backend, batch))."""
     dtype_bytes = np.dtype(dtype).itemsize
-    key = cache_key(geom, dtype, backend, device)
+    key = cache_key(geom, dtype, backend, device, batch)
     if use_cache:
         hit = _load_cache().get(key)
         # a refine=True request is only satisfied by a *timed* entry; a
@@ -277,17 +334,21 @@ def choose_tiles(
                               if k in TileChoice.__dataclass_fields__}),
                 source="cache")
 
-    cands = legal_tile_candidates(geom, dtype_bytes, device.onchip_bytes)
+    cands = legal_tile_candidates(geom, dtype_bytes, device.onchip_bytes,
+                                  batch=batch)
     if not cands:
-        choice = fallback_tiles(geom, dtype_bytes, device.onchip_bytes)
+        choice = fallback_tiles(geom, dtype_bytes, device.onchip_bytes,
+                                batch=batch)
     else:
-        ranked = rank_candidates(geom, cands, device)
+        ranked = rank_candidates(geom, cands, device, batch=batch)
         choice = ranked[0]
         if refine:
             timed = []
             for c in ranked[:refine_top_k]:
                 try:
-                    timed.append((_time_candidate(geom, c, dtype, backend), c))
+                    timed.append((_time_candidate(geom, c, dtype, backend,
+                                                  batch=max(batch, c.t_n)),
+                                  c))
                 except Exception:  # a candidate may fail to lower; skip it
                     continue
             if timed:

@@ -3,8 +3,13 @@
 This is the paper's FPGA accelerator re-derived for the TPU memory hierarchy:
 
 * **Grid = disjoint output tiles** (reverse loop over the *output* space):
-  each grid program owns one ``(T_OH, T_OW, T_CO)`` output block — one-shot
-  writes, no overlapping-sum, exactly the paper's CU array.
+  each grid program owns one ``(T_N, T_OH, T_OW, T_CO)`` output block —
+  one-shot writes, no overlapping-sum, exactly the paper's CU array.  The
+  leading ``T_N`` is the *batch tile*: the batch is folded into the MXU row
+  dimension so each tap matmul contracts over ``T_N * T_OH/S * T_OW/S``
+  rows with the weight slab stationary — on the fat-channel early layers
+  (16–49 spatial rows vs a 128x128 MXU) this is what fills the systolic
+  array, and it amortizes the weight-slab HBM stream over T_N images.
 * **Eq. 5 input streaming**: the x BlockSpec is a per-output-tile *halo
   window* of constant extent ``T_IH x T_IW`` (core.tiling.halo_tile) whose
   unblocked index map follows the output grid — each program streams only
@@ -59,34 +64,37 @@ def apply_activation(y: jax.Array, activation: Optional[str]) -> jax.Array:
 
 
 def x_halo_blockspec(
-    ht_h: HaloTile, ht_w: HaloTile, t_ci: int
+    ht_h: HaloTile, ht_w: HaloTile, t_ci: int, t_n: int = 1
 ) -> pl.BlockSpec:
     """Per-output-tile input window BlockSpec (the Eq. 5 streaming read).
 
     Unblocked indexing: the index map returns *element* offsets, which is
     what lets consecutive output tiles read overlapping halo windows —
-    impossible with block-granular indexing.  Exposed as a function so the
+    impossible with block-granular indexing.  The leading dimension is the
+    batch tile: one program streams the windows of ``t_n`` images (batch
+    folded into the MXU row dimension).  Exposed as a function so the
     tests can assert the block shape / index map directly.
     """
     step_h, base_h = ht_h.step, ht_h.base
     step_w, base_w = ht_w.step, ht_w.base
 
     def index_map(nb, oh, ow, co, ci):
-        return (nb, oh * step_h + base_h, ow * step_w + base_w, ci * t_ci)
+        return (nb * t_n, oh * step_h + base_h, ow * step_w + base_w,
+                ci * t_ci)
 
     return pl.BlockSpec(
-        (1, ht_h.extent, ht_w.extent, t_ci),
+        (t_n, ht_h.extent, ht_w.extent, t_ci),
         index_map,
         indexing_mode=pl.unblocked,
     )
 
 
 def _deconv2d_kernel(
-    x_ref,      # (1, T_IH, T_IW, T_CI)  VMEM halo window
-    w_ref,      # (K, K, T_CI, T_CO)     VMEM
-    b_ref,      # (1, T_CO)              VMEM
-    o_ref,      # (1, T_OH, T_OW, T_CO)  VMEM
-    acc_ref,    # (T_OH/S, S, T_OW/S, S, T_CO) f32 scratch
+    x_ref,      # (T_N, T_IH, T_IW, T_CI)  VMEM halo windows
+    w_ref,      # (K, K, T_CI, T_CO)       VMEM (batch-stationary)
+    b_ref,      # (1, T_CO)                VMEM
+    o_ref,      # (T_N, T_OH, T_OW, T_CO)  VMEM
+    acc_ref,    # (T_N, T_OH/S, S, T_OW/S, S, T_CO) f32 scratch
     *,
     plan: PhasePlan,
     ht_h: HaloTile,
@@ -99,6 +107,7 @@ def _deconv2d_kernel(
 ):
     s = plan.stride
     th, tw = t_oh // s, t_ow // s
+    t_n = x_ref.shape[0]
     ci_idx = pl.program_id(4)
 
     @pl.when(ci_idx == 0)
@@ -110,29 +119,31 @@ def _deconv2d_kernel(
 
     t_ci = x_ref.shape[3]
     t_co = w_ref.shape[3]
-    # Loop interchange (enhancement 2): taps outermost, weight slab stationary.
+    # Loop interchange (enhancement 2): taps outermost, weight slab stationary
+    # across both the phase loops AND the T_N batch images — each tap matmul
+    # contracts over T_N*th*tw rows (the batch-fused MXU fill).
     for ph in range(s):
         for pw in range(s):
-            acc = jnp.zeros((th * tw, t_co), dtype=jnp.float32)
+            acc = jnp.zeros((t_n * th * tw, t_co), dtype=jnp.float32)
             for kh, dh in plan.taps[ph]:
                 for kw, dw in plan.taps[pw]:
                     # static halo-local rows: the window already starts at
                     # this tile's minimum displacement.
                     r0 = ht_h.local_offset(dh)
                     c0 = ht_w.local_offset(dw)
-                    xs = x_ref[0, r0:r0 + th, c0:c0 + tw, :]
+                    xs = x_ref[:, r0:r0 + th, c0:c0 + tw, :]
                     acc = acc + jnp.dot(
-                        xs.reshape(th * tw, t_ci),
+                        xs.reshape(t_n * th * tw, t_ci),
                         w_ref[kh, kw],
                         preferred_element_type=jnp.float32,
                     )
-            acc_ref[:, ph, :, pw, :] += acc.reshape(th, tw, t_co)
+            acc_ref[:, :, ph, :, pw, :] += acc.reshape(t_n, th, tw, t_co)
 
     @pl.when(ci_idx == n_ci_tiles - 1)
     def _flush():
         # One-shot disjoint write: reassemble phases, fused epilogue, cast.
-        y = acc_ref[...].reshape(t_oh, t_ow, t_co)
-        o_ref[0] = apply_activation(y, activation).astype(out_dtype)
+        y = acc_ref[...].reshape(t_n, t_oh, t_ow, t_co)
+        o_ref[...] = apply_activation(y, activation).astype(out_dtype)
 
 
 def deconv2d_pallas_call(
@@ -147,6 +158,7 @@ def deconv2d_pallas_call(
     t_ow: int,
     t_ci: int,
     t_co: int,
+    t_n: int = 1,
     activation: Optional[str] = None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -156,6 +168,7 @@ def deconv2d_pallas_call(
     s = plan.stride
     assert t_oh % s == 0 and t_ow % s == 0, "tiles must be stride-aligned"
     assert cip % t_ci == 0 and cop % t_co == 0
+    assert n % t_n == 0, "batch must be padded to a t_n multiple"
     ht_h = halo_tile(t_oh, k, s, plan.padding)
     ht_w = halo_tile(t_ow, k, s, plan.padding)
     n_tiles_h = ohp // t_oh
@@ -163,7 +176,7 @@ def deconv2d_pallas_call(
     assert ihp >= ht_h.min_padded_extent(n_tiles_h), "input under-padded (h)"
     assert iwp >= ht_w.min_padded_extent(n_tiles_w), "input under-padded (w)"
     n_ci = cip // t_ci
-    grid = (n, n_tiles_h, n_tiles_w, cop // t_co, n_ci)
+    grid = (n // t_n, n_tiles_h, n_tiles_w, cop // t_co, n_ci)
 
     kernel = functools.partial(
         _deconv2d_kernel,
@@ -180,7 +193,7 @@ def deconv2d_pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            x_halo_blockspec(ht_h, ht_w, t_ci),
+            x_halo_blockspec(ht_h, ht_w, t_ci, t_n),
             pl.BlockSpec(
                 (k, k, t_ci, t_co),
                 lambda nb, oh, ow, co, ci: (0, 0, ci, co),
@@ -188,12 +201,12 @@ def deconv2d_pallas_call(
             pl.BlockSpec((1, t_co), lambda nb, oh, ow, co, ci: (0, co)),
         ],
         out_specs=pl.BlockSpec(
-            (1, t_oh, t_ow, t_co),
+            (t_n, t_oh, t_ow, t_co),
             lambda nb, oh, ow, co, ci: (nb, oh, ow, co),
         ),
         out_shape=jax.ShapeDtypeStruct((n, ohp, owp, cop), x_padded.dtype),
         scratch_shapes=[
-            pltpu.VMEM((t_oh // s, s, t_ow // s, s, t_co), jnp.float32)
+            pltpu.VMEM((t_n, t_oh // s, s, t_ow // s, s, t_co), jnp.float32)
         ],
         compiler_params=COMPILER_PARAMS(
             dimension_semantics=(

@@ -29,8 +29,8 @@ def _round_up(x: int, m: int) -> int:
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "stride", "padding", "t_oh", "t_ow", "t_ci", "t_co", "activation",
-        "interpret",
+        "stride", "padding", "t_oh", "t_ow", "t_ci", "t_co", "t_n",
+        "activation", "interpret",
     ),
 )
 def _deconv2d_jit(
@@ -43,6 +43,7 @@ def _deconv2d_jit(
     t_ow: int,
     t_ci: int,
     t_co: int,
+    t_n: int,
     activation: Optional[str],
     interpret: bool,
 ) -> jax.Array:
@@ -66,8 +67,10 @@ def _deconv2d_jit(
     pad_rw = max(0, (n_w_pad - 1 + plan.delta_max) - (iw - 1))
     cip = _round_up(ci, t_ci)
     cop = _round_up(co, t_co)
+    t_n = min(t_n, n) if n > 0 else 1
+    np_ = _round_up(n, t_n)
     xp = jnp.pad(
-        x, ((0, 0), (pad_l, pad_rh), (pad_l, pad_rw), (0, cip - ci))
+        x, ((0, np_ - n), (pad_l, pad_rh), (pad_l, pad_rw), (0, cip - ci))
     )
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, cip - ci), (0, cop - co)))
     bb = b if b is not None else jnp.zeros((co,), dtype=x.dtype)
@@ -77,11 +80,11 @@ def _deconv2d_jit(
         xp, wp, bp,
         plan=plan,
         ohp=ohp, owp=owp,
-        t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co,
+        t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co, t_n=t_n,
         activation=activation,
         interpret=interpret,
     )
-    return y[:, :oh, :ow, :co]
+    return y[:n, :oh, :ow, :co]
 
 
 def resolve_tiles(
@@ -93,24 +96,32 @@ def resolve_tiles(
     t_ow: Optional[int],
     t_ci: Optional[int],
     t_co: Optional[int],
+    t_n: Optional[int] = None,
     backend: str = "pallas",
     autotune: bool = True,
 ):
-    """Fill unspecified tile factors (shared by dense and sparse wrappers)."""
+    """Fill unspecified tile factors (shared by dense and sparse wrappers).
+
+    The batch tile ``t_n`` is resolved jointly with the spatial/channel
+    tiles against the caller's batch size (``x.shape[0]``): the autotuner
+    DSE scores candidates by MXU row fill + amortized weight traffic.
+    Explicitly passing all four legacy factors but not ``t_n`` keeps the
+    per-image grid (t_n=1) — the pre-batch-fusion behavior."""
     n, ih, iw, ci = x.shape
     k, _, _, co = w.shape
     if None not in (t_oh, t_ow, t_ci, t_co):
-        return t_oh, t_ow, t_ci, t_co
+        return t_oh, t_ow, t_ci, t_co, (t_n or 1)
     geom = DeconvGeometry(ih, iw, ci, co, k, stride, padding)
     if autotune:
         from ..autotune import choose_tiles
 
-        c = choose_tiles(geom, x.dtype, backend=backend)
+        c = choose_tiles(geom, x.dtype, backend=backend, batch=n)
     else:
         from ..autotune import fallback_tiles
 
-        c = fallback_tiles(geom, jnp.dtype(x.dtype).itemsize)
-    return (t_oh or c.t_oh, t_ow or c.t_ow, t_ci or c.t_ci, t_co or c.t_co)
+        c = fallback_tiles(geom, jnp.dtype(x.dtype).itemsize, batch=n)
+    return (t_oh or c.t_oh, t_ow or c.t_ow, t_ci or c.t_ci, t_co or c.t_co,
+            t_n or c.t_n)
 
 
 def deconv2d(
@@ -123,6 +134,7 @@ def deconv2d(
     t_ow: Optional[int] = None,
     t_ci: Optional[int] = None,
     t_co: Optional[int] = None,
+    t_n: Optional[int] = None,
     activation: Optional[str] = None,
     interpret: Optional[bool] = None,
     autotune: bool = True,
@@ -132,16 +144,19 @@ def deconv2d(
     x: (N, IH, IW, CI); w: (K, K, CI, CO); b: (CO,) or None.
     Output: (N, OH, OW, CO), OH = (IH-1)*S + K - 2P.
     `activation` ("relu"/"tanh"/None) runs fused in the kernel's flush phase.
-    Unspecified tile factors come from the DSE autotuner cache/model
-    (`autotune=False` selects the clamped fixed heuristic instead).
+    ``t_n`` is the batch tile: each grid program owns ``t_n`` images and the
+    tap matmuls contract over ``t_n * T_OH/S * T_OW/S`` rows (the batch is
+    zero-padded to a ``t_n`` multiple and sliced back).  Unspecified tile
+    factors come from the DSE autotuner cache/model (`autotune=False`
+    selects the clamped fixed heuristic instead).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    t_oh, t_ow, t_ci, t_co = resolve_tiles(
-        x, w, stride, padding, t_oh, t_ow, t_ci, t_co,
+    t_oh, t_ow, t_ci, t_co, t_n = resolve_tiles(
+        x, w, stride, padding, t_oh, t_ow, t_ci, t_co, t_n,
         backend="pallas", autotune=autotune,
     )
     return _deconv2d_jit(
-        x, w, b, stride, padding, t_oh, t_ow, t_ci, t_co, activation,
+        x, w, b, stride, padding, t_oh, t_ow, t_ci, t_co, t_n, activation,
         interpret,
     )

@@ -60,11 +60,11 @@ def _sparse_kernel(
     valid_ref,     # (n_co, L)
     tap_ref,       # (n_co, L, K*K)
     # VMEM blocks
-    x_ref,         # (1, T_IH, T_IW, T_CI)  halo window
+    x_ref,         # (T_N, T_IH, T_IW, T_CI)  halo windows
     w_ref,         # (K, K, T_CI, T_CO)
     b_ref,         # (1, T_CO)
-    o_ref,         # (1, T_OH, T_OW, T_CO)
-    acc_ref,       # (T_OH/S, S, T_OW/S, S, T_CO) f32
+    o_ref,         # (T_N, T_OH, T_OW, T_CO)
+    acc_ref,       # (T_N, T_OH/S, S, T_OW/S, S, T_CO) f32
     *,
     plan: PhasePlan,
     ht_h: HaloTile,
@@ -78,6 +78,7 @@ def _sparse_kernel(
 ):
     s = plan.stride
     th, tw = t_oh // s, t_ow // s
+    t_n = x_ref.shape[0]
     l_idx = pl.program_id(4)
     co_t = pl.program_id(3)
 
@@ -95,28 +96,30 @@ def _sparse_kernel(
     def _compute():
         for ph in range(s):
             for pw in range(s):
-                acc = jnp.zeros((th * tw, t_co), dtype=jnp.float32)
+                acc = jnp.zeros((t_n * th * tw, t_co), dtype=jnp.float32)
                 for kh, dh in plan.taps[ph]:
                     for kw, dw in plan.taps[pw]:
                         # static-schedule zero-skipping: the tap bit is a
                         # scalar in SMEM, so Mosaic predicates the matmul.
                         tap_live = tap_ref[co_t, l_idx, kh * kernel_size + kw] > 0
-                        # static halo-local rows (window follows the grid)
+                        # static halo-local rows (window follows the grid);
+                        # batch folded into the contraction rows, weight
+                        # slab stationary across the T_N images.
                         r0 = ht_h.local_offset(dh)
                         c0 = ht_w.local_offset(dw)
-                        xs = x_ref[0, r0:r0 + th, c0:c0 + tw, :]
+                        xs = x_ref[:, r0:r0 + th, c0:c0 + tw, :]
                         contrib = jnp.dot(
-                            xs.reshape(th * tw, t_ci),
+                            xs.reshape(t_n * th * tw, t_ci),
                             w_ref[kh, kw],
                             preferred_element_type=jnp.float32,
                         )
                         acc = acc + jnp.where(tap_live, contrib, 0.0)
-                acc_ref[:, ph, :, pw, :] += acc.reshape(th, tw, t_co)
+                acc_ref[:, :, ph, :, pw, :] += acc.reshape(t_n, th, tw, t_co)
 
     @pl.when(l_idx == n_sched - 1)
     def _flush():
-        y = acc_ref[...].reshape(t_oh, t_ow, t_co)
-        o_ref[0] = apply_activation(y, activation).astype(out_dtype)
+        y = acc_ref[...].reshape(t_n, t_oh, t_ow, t_co)
+        o_ref[...] = apply_activation(y, activation).astype(out_dtype)
 
 
 def deconv2d_sparse_pallas_call(
@@ -134,6 +137,7 @@ def deconv2d_sparse_pallas_call(
     t_ow: int,
     t_ci: int,
     t_co: int,
+    t_n: int = 1,
     activation=None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -141,6 +145,7 @@ def deconv2d_sparse_pallas_call(
     k = w.shape[0]
     cop = w.shape[3]
     s = plan.stride
+    assert n % t_n == 0, "batch must be padded to a t_n multiple"
     ht_h = halo_tile(t_oh, k, s, plan.padding)
     ht_w = halo_tile(t_ow, k, s, plan.padding)
     n_tiles_h = ohp // t_oh
@@ -148,7 +153,7 @@ def deconv2d_sparse_pallas_call(
     assert ihp >= ht_h.min_padded_extent(n_tiles_h), "input under-padded (h)"
     assert iwp >= ht_w.min_padded_extent(n_tiles_w), "input under-padded (w)"
     n_sched = ci_idx.shape[1]
-    grid = (n, n_tiles_h, n_tiles_w, cop // t_co, n_sched)
+    grid = (n // t_n, n_tiles_h, n_tiles_w, cop // t_co, n_sched)
 
     kernel = functools.partial(
         _sparse_kernel,
@@ -169,11 +174,12 @@ def deconv2d_sparse_pallas_call(
         grid=grid,
         in_specs=[
             pl.BlockSpec(
-                (1, ht_h.extent, ht_w.extent, t_ci),
-                # Eq. 5 halo window following the output grid, with DMA
-                # indirection on channels: only surviving CI slabs stream.
+                (t_n, ht_h.extent, ht_w.extent, t_ci),
+                # Eq. 5 halo windows (t_n images) following the output grid,
+                # with DMA indirection on channels: only surviving CI slabs
+                # stream.
                 lambda nb, oh, ow, co, l, ci_idx, valid, taps: (
-                    nb, oh * step_h + base_h, ow * step_w + base_w,
+                    nb * t_n, oh * step_h + base_h, ow * step_w + base_w,
                     ci_idx[co, l] * t_ci,
                 ),
                 indexing_mode=pl.unblocked,
@@ -190,11 +196,11 @@ def deconv2d_sparse_pallas_call(
             ),
         ],
         out_specs=pl.BlockSpec(
-            (1, t_oh, t_ow, t_co),
+            (t_n, t_oh, t_ow, t_co),
             lambda nb, oh, ow, co, l, ci_idx, valid, taps: (nb, oh, ow, co),
         ),
         scratch_shapes=[
-            pltpu.VMEM((t_oh // plan.stride, plan.stride,
+            pltpu.VMEM((t_n, t_oh // plan.stride, plan.stride,
                         t_ow // plan.stride, plan.stride, t_co), jnp.float32)
         ],
     )

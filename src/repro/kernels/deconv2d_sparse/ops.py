@@ -38,11 +38,11 @@ def make_sparse_plan(
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "t_oh", "t_ow", "t_ci", "t_co",
-                     "activation", "interpret"),
+                     "t_n", "activation", "interpret"),
 )
 def _deconv2d_sparse_jit(
     x, w, b, ci_idx, valid, tap_mask,
-    stride, padding, t_oh, t_ow, t_ci, t_co, activation, interpret,
+    stride, padding, t_oh, t_ow, t_ci, t_co, t_n, activation, interpret,
 ):
     n, ih, iw, ci = x.shape
     k, _, _, co = w.shape
@@ -59,17 +59,20 @@ def _deconv2d_sparse_jit(
     pad_rw = max(0, (n_w_pad - 1 + plan.delta_max) - (iw - 1))
     cip = _round_up(ci, t_ci)
     cop = _round_up(co, t_co)
-    xp = jnp.pad(x, ((0, 0), (pad_l, pad_rh), (pad_l, pad_rw), (0, cip - ci)))
+    t_n = min(t_n, n) if n > 0 else 1
+    np_ = _round_up(n, t_n)
+    xp = jnp.pad(x, ((0, np_ - n), (pad_l, pad_rh), (pad_l, pad_rw),
+                     (0, cip - ci)))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, cip - ci), (0, cop - co)))
     bb = b if b is not None else jnp.zeros((co,), dtype=x.dtype)
     bp = jnp.pad(bb, (0, cop - co)).reshape(1, cop).astype(x.dtype)
     y = deconv2d_sparse_pallas_call(
         xp, wp, bp, ci_idx, valid, tap_mask,
         plan=plan, ohp=ohp, owp=owp,
-        t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co,
+        t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co, t_n=t_n,
         activation=activation, interpret=interpret,
     )
-    return y[:, :oh, :ow, :co]
+    return y[:n, :oh, :ow, :co]
 
 
 def deconv2d_sparse(
@@ -82,6 +85,7 @@ def deconv2d_sparse(
     t_ow: Optional[int] = None,
     t_ci: Optional[int] = None,
     t_co: Optional[int] = None,
+    t_n: Optional[int] = None,
     activation: Optional[str] = None,
     interpret: Optional[bool] = None,
     autotune: bool = True,
@@ -91,11 +95,13 @@ def deconv2d_sparse(
 
     ``plan`` is a precomputed `make_sparse_plan` result (built with the
     same t_ci/t_co); serving paths pass it to avoid re-deriving the static
-    schedule — an O(weights) host computation — on every call."""
+    schedule — an O(weights) host computation — on every call.  ``t_n``
+    batch-tiles the grid exactly as in the dense kernel (the schedule is
+    batch-independent, so one plan serves every bucket)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    t_oh, t_ow, t_ci, t_co = resolve_tiles(
-        x, w, stride, padding, t_oh, t_ow, t_ci, t_co,
+    t_oh, t_ow, t_ci, t_co, t_n = resolve_tiles(
+        x, w, stride, padding, t_oh, t_ow, t_ci, t_co, t_n,
         backend="pallas_sparse", autotune=autotune,
     )
     if plan is None:
@@ -110,5 +116,5 @@ def deconv2d_sparse(
     return _deconv2d_sparse_jit(
         x, w, b, jnp.asarray(ci_idx), jnp.asarray(valid),
         jnp.asarray(tap_mask), stride, padding,
-        t_oh, t_ow, t_ci, t_co, activation, interpret,
+        t_oh, t_ow, t_ci, t_co, t_n, activation, interpret,
     )

@@ -1,17 +1,23 @@
-"""Batched serving engine: prefill + KV-cache decode with slot-based
-continuous batching.
+"""Batched serving engines.
 
-`ServeEngine` keeps a fixed batch of sequence slots; finished sequences free
-their slot and queued requests are admitted at the next step (continuous
-batching).  The decode step is a single compiled function over the whole
-slot batch — the production pattern for TPU serving.
+`ServeEngine` (LM path) keeps a fixed batch of sequence slots with
+*continuous batching*: a finished sequence frees its slot and a queued
+request is admitted into it mid-flight — the in-flight slots keep their
+accumulated tokens and continue decoding.  The decode step is a single
+compiled function over the whole slot batch.
 
 `DcnnServeEngine` is the paper's own serving path: batched z -> image
-generation through a selectable deconvolution backend."""
+generation through a selectable deconvolution backend, run as a real
+throughput engine — request batches are padded to a fixed set of
+power-of-two *buckets* so the generator compiles once per bucket (never
+per request shape), each bucket's tile assignment (including the batch
+tile ``t_n``) is resolved against that bucket's batch size, and a
+``submit``/``collect`` micro-batching queue coalesces small requests into
+the largest fitting bucket."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +44,10 @@ class ServeEngine:
         self.max_len = max_len
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
+        # scheduler observability (reset per serve() call)
+        self.prefill_steps = 0
+        self.decode_steps = 0
+        self.sample_steps = 0
 
         def prefill(params, tokens):
             cache = init_cache(cfg, batch_size, max_len)
@@ -73,77 +83,286 @@ class ServeEngine:
     # continuous batching: slot scheduler over queued requests
     # ------------------------------------------------------------------
     def serve(self, requests: List[Request]) -> List[Request]:
-        """Processes requests with slot reuse.  Prompts are padded into the
-        fixed slot batch; finished slots admit queued requests."""
+        """Continuous batching over the fixed slot batch.
+
+        A request is admitted the moment a slot frees — mid-flight, not at
+        chunk boundaries — so a long request no longer holds short ones
+        hostage (the pre-fix behavior ran static chunks at the chunk-max
+        budget).  Admission (re)prefills the *accumulated histories* of
+        every active slot, left-padded so all slots share the scalar cache
+        position; in-flight slots keep their generated tokens and continue
+        from exactly where they were (greedy decoding is bit-identical to
+        running each request alone).  Between admissions all slots advance
+        through the single compiled decode step.  Each request generates
+        exactly its own ``max_new_tokens`` — no slot burns steps on
+        another slot's budget.
+
+        Left-pad tokens are ordinary tokens to the (causal, unmasked)
+        model — the same property the chunked scheduler already had for
+        mixed-length prompts — so a request admitted mid-flight decodes
+        the oracle continuation of its *padded* history (pinned by
+        tests/test_serve.py::test_continuous_batching_midflight_admission),
+        and an admission whose prompt is *longer* than every in-flight
+        history re-pads the in-flight slots too, perturbing their
+        remaining continuation (in-flight decoding is bit-stable only
+        while the slot stays at the longest history).  Each admission also
+        re-prefills at a new (batch, s_max) shape, i.e. one XLA compile
+        per distinct admission length; length-bucketing the prefill would
+        bound that but — without a pad mask — padding is semantics, so it
+        stays exact-shape until the model grows pad masking.
+        """
         queue = list(requests)
         done: List[Request] = []
-        while queue:
-            active = queue[: self.batch]
-            queue = queue[self.batch:]
-            s_max = max(len(r.prompt) for r in active)
-            pad = np.zeros((self.batch, s_max), np.int32)
-            for i, r in enumerate(active):
-                pad[i, s_max - len(r.prompt):] = r.prompt  # left-pad
-            budget = max(r.max_new_tokens for r in active)
-            out = self.generate(pad, budget)
-            for i, r in enumerate(active):
-                r.out = out[i, : r.max_new_tokens]
-                done.append(r)
+        slots: List[Optional[dict]] = [None] * self.batch
+        self.prefill_steps = self.decode_steps = self.sample_steps = 0
+        nxt = None
+        cache = None
+        while queue or any(s is not None for s in slots):
+            admitted = False
+            for i in range(self.batch):
+                while slots[i] is None and queue:
+                    r = queue.pop(0)
+                    if r.max_new_tokens <= 0:
+                        # zero-budget request: complete without a slot (the
+                        # slot loop tests `left == 0` only after a decrement,
+                        # so admitting it would never free the slot)
+                        r.out = np.zeros((0,), np.int32)
+                        done.append(r)
+                        continue
+                    slots[i] = {
+                        "req": r,
+                        "hist": [int(t) for t in np.asarray(r.prompt)],
+                        "left": int(r.max_new_tokens),
+                        "gen": [],
+                    }
+                    admitted = True
+            if not any(s is not None for s in slots):
+                break  # every remaining request was zero-budget
+            if admitted:
+                # re-prefill the active histories (left-padded: every slot
+                # sits at the same cache position, which is what the shared
+                # scalar cache["pos"] requires)
+                s_max = max(len(s["hist"]) for s in slots if s is not None)
+                worst = s_max + max(s["left"] for s in slots
+                                    if s is not None)
+                assert worst <= self.max_len, (
+                    f"history+budget ({worst}) exceeds max_len "
+                    f"({self.max_len}); the KV cache would overflow")
+                pad = np.zeros((self.batch, s_max), np.int32)
+                for i, s in enumerate(slots):
+                    if s is not None:
+                        pad[i, s_max - len(s["hist"]):] = s["hist"]
+                logits, cache = self._prefill(self.params, jnp.asarray(pad))
+                self.prefill_steps += 1
+            else:
+                logits, cache = self._decode(self.params, cache, nxt[:, None])
+                self.decode_steps += 1
+            self.key, k = jax.random.split(self.key)
+            nxt = sample(logits, k, self.temperature)
+            self.sample_steps += 1
+            nxt_np = np.asarray(nxt)
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                tok = int(nxt_np[i])
+                s["gen"].append(tok)
+                s["hist"].append(tok)
+                s["left"] -= 1
+                if s["left"] == 0:
+                    s["req"].out = np.asarray(s["gen"], np.int32)
+                    done.append(s["req"])
+                    slots[i] = None   # freed: admitted from queue next step
         return done
 
 
-class DcnnServeEngine:
-    """The paper's inference workload: batched image generation.
+def pow2_buckets(max_batch: int) -> Tuple[int, ...]:
+    """1, 2, 4, ... up to (and including) max_batch."""
+    if max_batch < 1:
+        raise ValueError("max_batch must be >= 1")
+    out = [1]
+    while out[-1] < max_batch:
+        out.append(min(out[-1] * 2, max_batch))
+    return tuple(sorted(set(out)))
 
-    The default path is the fused halo-streaming Pallas kernel chain
-    (bias + activation in the kernel epilogue, per-tile Eq. 5 input
-    streaming).  Tile factors are resolved once at engine construction —
-    eagerly, so the autotuner may refine with on-device timing
-    (``refine=True``) and persist the choices; the jitted generator then
-    sees only static, pre-resolved tiles."""
+
+class DcnnServeEngine:
+    """The paper's inference workload: batched image generation, served
+    through compile-once batch buckets.
+
+    * **Bucketing** — request batches are padded up to the smallest bucket
+      that fits (oversized requests are chunked at the largest bucket), so
+      a mixed-size request stream compiles at most ``len(buckets)``
+      generator executables — never one per batch shape.
+    * **Per-bucket tiles** — for the pallas backends each bucket's tile
+      assignment is resolved against that bucket's batch size, letting the
+      autotuner pick the batch tile ``t_n`` jointly with the spatial and
+      channel tiles (MXU row fill + weight amortization).  Executables are
+      built lazily on first use, or eagerly with ``warmup=True`` (which
+      also runs one zero-batch through each to pay compile + first-dma
+      cost before traffic arrives).
+    * **Donated inputs** — on TPU the z buffer is donated to the compiled
+      generator, so steady-state serving does not hold two copies of the
+      input batch (no-op on CPU, where donation is unimplemented).
+    * **Micro-batching queue** — ``submit`` enqueues request rows;
+      ``drain`` coalesces everything pending into one generate() over the
+      largest fitting buckets; ``collect`` returns a request's images
+      (draining on demand).
+
+    ``trace_counts`` maps bucket -> number of times its generator was
+    traced (== compiled); tests pin the no-per-request-recompilation
+    guarantee on it."""
 
     def __init__(self, cfg: DcnnConfig, params, backend: str = "pallas",
-                 autotune: bool = True, refine: bool = False):
+                 autotune: bool = True, refine: bool = False,
+                 max_batch: int = 64,
+                 buckets: Optional[Sequence[int]] = None,
+                 warmup: bool = False, donate: bool = True):
         self.cfg = cfg
         self.params = params
         self.backend = backend
-        self.tile_choices = None
-        sparse_plans = None
-        if backend in ("pallas", "pallas_sparse"):
-            # resolve tiles once, eagerly: autotuned (cache/model/timed) or
-            # the clamped fixed heuristic when autotune=False — either way
-            # the jitted generator sees only pre-resolved static tiles.
-            from ..kernels.autotune import choose_tiles, fallback_tiles
+        self.buckets = (tuple(sorted(set(int(b) for b in buckets)))
+                        if buckets else pow2_buckets(max_batch))
+        if self.buckets[0] < 1:
+            raise ValueError(f"buckets must be positive: {self.buckets}")
+        self.max_bucket = self.buckets[-1]
+        self._autotune = autotune
+        self._refine = refine
+        # donation is a TPU win (steady-state z buffers are reused); on CPU
+        # jax warns that donation is unimplemented, so gate on the backend
+        self._donate = donate and jax.default_backend() == "tpu"
+        self._fns: Dict[int, Callable] = {}
+        self.tile_choices: Dict[int, Optional[dict]] = {}
+        self.trace_counts: Dict[int, int] = {}
+        self._sparse_plan_memo: Dict[tuple, tuple] = {}
+        self._pending: List[Tuple[int, np.ndarray]] = []
+        self._results: Dict[int, np.ndarray] = {}
+        self._next_id = 0
+        self.stats = {"generate_calls": 0, "images": 0, "padded_images": 0}
+        if warmup:
+            for b in self.buckets:
+                self._warmup_bucket(b)
 
-            if autotune:
-                self.tile_choices = {
-                    i: choose_tiles(g, cfg.jdtype, backend=backend,
-                                    refine=refine)
-                    for i, g in enumerate(cfg.geometries())
-                }
-            else:
-                self.tile_choices = {
-                    i: fallback_tiles(g, cfg.jdtype.itemsize)
-                    for i, g in enumerate(cfg.geometries())
-                }
-            if backend == "pallas_sparse":
-                # the zero-skip schedule is static per network: build it once
-                # from the concrete weights instead of on every generate()
-                from ..kernels.deconv2d_sparse import make_sparse_plan
+    # -- per-bucket executable construction ----------------------------
+    def _tiles_for(self, bucket: int) -> Optional[dict]:
+        if self.backend not in ("pallas", "pallas_sparse"):
+            return None
+        from ..kernels.autotune import choose_tiles, fallback_tiles
 
-                sparse_plans = {
-                    i: make_sparse_plan(
-                        np.asarray(params[f"l{i}"]["w"]), l.stride, l.padding,
-                        self.tile_choices[i].t_ci, self.tile_choices[i].t_co)
-                    for i, l in enumerate(cfg.layers)
-                }
-        # with plans + tiles pre-resolved, no backend needs concrete weights
-        # at trace time, so the whole generator compiles as one function.
-        self._fn = jax.jit(
-            lambda p, z: generator_apply(
-                p, cfg, z, backend=backend,
-                tile_overrides=self.tile_choices,
-                sparse_plans=sparse_plans))
+        if self._autotune:
+            return {i: choose_tiles(g, self.cfg.jdtype, backend=self.backend,
+                                    refine=self._refine, batch=bucket)
+                    for i, g in enumerate(self.cfg.geometries())}
+        return {i: fallback_tiles(g, self.cfg.jdtype.itemsize, batch=bucket)
+                for i, g in enumerate(self.cfg.geometries())}
 
+    def _sparse_plans_for(self, tiles: dict) -> Optional[dict]:
+        if self.backend != "pallas_sparse":
+            return None
+        from ..kernels.deconv2d_sparse import make_sparse_plan
+
+        # the zero-skip schedule depends only on (layer, t_ci, t_co) — NOT
+        # on the bucket — so buckets sharing channel tiles share the plan
+        plans = {}
+        for i, l in enumerate(self.cfg.layers):
+            key = (i, tiles[i].t_ci, tiles[i].t_co)
+            if key not in self._sparse_plan_memo:
+                self._sparse_plan_memo[key] = make_sparse_plan(
+                    np.asarray(self.params[f"l{i}"]["w"]), l.stride,
+                    l.padding, tiles[i].t_ci, tiles[i].t_co)
+            plans[i] = self._sparse_plan_memo[key]
+        return plans
+
+    def _get_fn(self, bucket: int) -> Callable:
+        if bucket not in self._fns:
+            tiles = self._tiles_for(bucket)
+            plans = self._sparse_plans_for(tiles) if tiles else None
+            self.tile_choices[bucket] = tiles
+
+            def fn(p, z, _b=bucket, _tiles=tiles, _plans=plans):
+                # tracing happens exactly once per compilation: the counter
+                # is the no-per-request-recompilation acceptance probe
+                self.trace_counts[_b] = self.trace_counts.get(_b, 0) + 1
+                return generator_apply(p, self.cfg, z, backend=self.backend,
+                                       tile_overrides=_tiles,
+                                       sparse_plans=_plans)
+
+            self._fns[bucket] = (jax.jit(fn, donate_argnums=(1,))
+                                 if self._donate else jax.jit(fn))
+        return self._fns[bucket]
+
+    def _warmup_bucket(self, bucket: int) -> None:
+        fn = self._get_fn(bucket)
+        z = jnp.zeros((bucket, self.cfg.z_dim), self.cfg.jdtype)
+        jax.block_until_ready(fn(self.params, z))
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket covering n requests (largest bucket if n exceeds
+        them all — the caller then chunks)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.max_bucket
+
+    # -- synchronous path ----------------------------------------------
     def generate(self, z: np.ndarray) -> np.ndarray:
-        return np.asarray(self._fn(self.params, jnp.asarray(z)))
+        """z: (B, z_dim) for ANY B: padded to the bucket set (and chunked at
+        the largest bucket), so no batch size ever triggers a recompile."""
+        z = np.asarray(z, dtype=self.cfg.dtype)
+        n = z.shape[0]
+        outs: List[np.ndarray] = []
+        i = 0
+        while i < n:
+            remaining = n - i
+            bucket = self.bucket_for(remaining)
+            take = min(bucket, remaining)
+            chunk = z[i:i + take]
+            if take < bucket:
+                chunk = np.concatenate(
+                    [chunk, np.zeros((bucket - take,) + z.shape[1:],
+                                     z.dtype)], axis=0)
+                self.stats["padded_images"] += bucket - take
+            fn = self._get_fn(bucket)
+            y = np.asarray(fn(self.params, jnp.asarray(chunk)))
+            outs.append(y[:take])
+            i += take
+        self.stats["generate_calls"] += 1
+        self.stats["images"] += n
+        return (np.concatenate(outs, axis=0) if len(outs) != 1 else outs[0])
+
+    # -- micro-batching queue --------------------------------------------
+    def submit(self, z: np.ndarray) -> int:
+        """Enqueue a request of one or more z rows; returns a ticket id."""
+        z = np.asarray(z, dtype=self.cfg.dtype)
+        if z.ndim == 1:
+            z = z[None, :]
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append((rid, z))
+        return rid
+
+    def drain(self) -> None:
+        """Run everything pending as one coalesced stream: all queued rows
+        are concatenated and generated at the largest fitting buckets, so
+        ten 3-image requests cost three bucket-32 calls' padding, not ten
+        bucket-4 calls."""
+        if not self._pending:
+            return
+        reqs, self._pending = self._pending, []
+        rows = np.concatenate([z for _, z in reqs], axis=0)
+        imgs = self.generate(rows)
+        ofs = 0
+        for rid, z in reqs:
+            self._results[rid] = imgs[ofs:ofs + len(z)]
+            ofs += len(z)
+
+    def collect(self, rid: int) -> np.ndarray:
+        """Images for ticket ``rid`` (drains the queue if still pending)."""
+        if rid not in self._results:
+            self.drain()
+        if rid not in self._results:
+            raise KeyError(f"unknown or already-collected ticket {rid}")
+        return self._results.pop(rid)
+
+    @property
+    def total_compiles(self) -> int:
+        return sum(self.trace_counts.values())

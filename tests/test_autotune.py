@@ -29,7 +29,9 @@ def _assert_legal(geom, c: TileChoice, dtype_bytes=4):
     s = geom.stride
     assert c.t_oh % s == 0 and c.t_ow % s == 0
     assert c.t_oh > 0 and c.t_ow > 0 and c.t_ci > 0 and c.t_co > 0
-    fp = kernel_vmem_bytes(geom, c.t_oh, c.t_ow, c.t_ci, c.t_co, dtype_bytes)
+    assert c.t_n > 0
+    fp = kernel_vmem_bytes(geom, c.t_oh, c.t_ow, c.t_ci, c.t_co, dtype_bytes,
+                           t_n=c.t_n)
     assert fp <= TPU_V5E.onchip_bytes, f"tile {c} exceeds VMEM: {fp}"
 
 
@@ -45,9 +47,11 @@ def test_chosen_tiles_legal_and_within_vmem(geom, tmp_cache):
 
 
 def test_candidates_all_fit_budget():
-    for (t_oh, t_ow, t_ci, t_co) in legal_tile_candidates(CELEBA_L2):
-        assert kernel_vmem_bytes(CELEBA_L2, t_oh, t_ow, t_ci, t_co, 4) \
-            <= TPU_V5E.onchip_bytes
+    for (t_oh, t_ow, t_ci, t_co, t_n) in legal_tile_candidates(
+            CELEBA_L2, batch=16):
+        assert t_n <= 16
+        assert kernel_vmem_bytes(CELEBA_L2, t_oh, t_ow, t_ci, t_co, 4,
+                                 t_n=t_n) <= TPU_V5E.onchip_bytes
 
 
 def test_fallback_clamps_large_ci_co_layers():
@@ -107,6 +111,106 @@ def test_sparse_plan_tile_mismatch_rejected(tmp_cache, rng):
     with pytest.raises(ValueError, match="C_out tiles"):
         deconv2d_sparse(x, jnp.asarray(w), None, 2, 1,
                         t_ci=8, t_co=32, plan=plan)  # 1 C_out tile
+
+
+def test_batch_tile_options_never_exceed_batch():
+    """Review regression: a non-power-of-two batch must not enumerate a
+    t_n beyond the batch (it would be scored with an MXU fill the clamped
+    kernel can't reach)."""
+    from repro.kernels.autotune import _batch_tile_options
+
+    assert _batch_tile_options(6) == [1, 2, 4, 6]
+    assert _batch_tile_options(1) == [1]
+    assert _batch_tile_options(64) == [1, 2, 4, 8, 16, 32, 64]
+    assert _batch_tile_options(100) == [1, 2, 4, 8, 16, 32, 64]  # cap
+    for b in range(1, 70):
+        assert all(t <= b for t in _batch_tile_options(b))
+
+
+def test_choice_batch_aware_t_n(tmp_cache):
+    """The batch tile is chosen jointly: batch=1 keeps the per-image grid,
+    a batch-64 request on the row-starved CelebA L1 batch-fuses, and t_n
+    never exceeds the batch it was fitted to."""
+    l1 = DeconvGeometry(1, 1, 100, 1024, 4, 1, 0)
+    c1 = choose_tiles(l1, jnp.float32, backend="pallas", batch=1)
+    assert c1.t_n == 1
+    c64 = choose_tiles(l1, jnp.float32, backend="pallas", batch=64)
+    assert 1 < c64.t_n <= 64
+    _assert_legal(l1, c64)
+    # distinct cache entries per batch (the key carries the bucket)
+    assert choose_tiles(l1, jnp.float32, backend="pallas",
+                        batch=64).source == "cache"
+    assert choose_tiles(l1, jnp.float32, backend="pallas",
+                        batch=32).source != "cache"
+
+
+def test_fallback_t_n_targets_mxu_rows(tmp_cache):
+    """The clamped heuristic grows t_n (powers of two within the batch)
+    until the tap matmuls reach ~128 contraction rows."""
+    l1 = DeconvGeometry(1, 1, 100, 1024, 4, 1, 0)  # 4x4 out -> 16 rows/img
+    c = fallback_tiles(l1, batch=64)
+    assert c.t_n * (c.t_oh // l1.stride) * (c.t_ow // l1.stride) >= 128
+    _assert_legal(l1, c)
+    assert fallback_tiles(l1, batch=1).t_n == 1
+    # a layer already at >=128 spatial rows stays per-image
+    fat = DeconvGeometry(32, 32, 128, 3, 4, 2, 1)
+    assert fallback_tiles(fat, batch=64).t_n == 1
+
+
+def test_stale_v1_schema_entry_not_served(tmp_cache):
+    """Satellite: a cache entry without the batch tile (the v1 4-tuple
+    schema) must be dropped on load, not silently served as stale tiles."""
+    import json
+
+    from repro.kernels.autotune import cache_key
+
+    key = cache_key(MNIST_L2, jnp.float32, "pallas")
+    stale = {key: {"t_oh": 2, "t_ow": 2, "t_ci": 8, "t_co": 8,
+                   "source": "timed", "attainable_ops": 1.0,
+                   "vmem_bytes": 1}}   # no t_n: pre-t_n schema
+    tmp_cache.write_text(json.dumps(stale))
+    c = choose_tiles(MNIST_L2, jnp.float32, backend="pallas")
+    assert c.source != "cache"
+    assert c.as_kwargs() != {"t_oh": 2, "t_ow": 2, "t_ci": 8, "t_co": 8,
+                             "t_n": 1}
+
+
+def test_corrupt_cache_recovery(tmp_cache):
+    """Corrupt JSON (truncated write, hand edit) and malformed entries
+    recover to a re-tune instead of crashing or serving garbage."""
+    import json
+
+    from repro.kernels import autotune
+    from repro.kernels.autotune import cache_key
+
+    tmp_cache.write_text("{not json")
+    c = choose_tiles(MNIST_L2, jnp.float32, backend="pallas")
+    assert c.source == "model"
+    _assert_legal(MNIST_L2, c)
+    # the re-tuned entry was persisted over the corruption and now serves
+    assert choose_tiles(MNIST_L2, jnp.float32,
+                        backend="pallas").source == "cache"
+    # malformed entry values (wrong types / non-dict) are dropped on load
+    autotune._cache = None
+    blob = json.loads(tmp_cache.read_text())
+    blob[cache_key(CELEBA_L2, jnp.float32, "pallas")] = "bogus"
+    blob[cache_key(CELEBA_L2, jnp.bfloat16, "pallas")] = {"t_oh": "four"}
+    tmp_cache.write_text(json.dumps(blob))
+    assert choose_tiles(MNIST_L2, jnp.float32,
+                        backend="pallas").source == "cache"
+    c2 = choose_tiles(CELEBA_L2, jnp.float32, backend="pallas")
+    assert c2.source != "cache"
+    _assert_legal(CELEBA_L2, c2)
+
+
+def test_cache_roundtrip_includes_t_n(tmp_cache):
+    """A batch-fused choice persists t_n and serves it back verbatim."""
+    l1 = DeconvGeometry(1, 1, 100, 1024, 4, 1, 0)
+    c = choose_tiles(l1, jnp.float32, backend="pallas", batch=64)
+    assert c.t_n > 1
+    hit = choose_tiles(l1, jnp.float32, backend="pallas", batch=64)
+    assert hit.source == "cache"
+    assert hit.as_kwargs() == c.as_kwargs()
 
 
 def test_autotuned_kernel_matches_reference(tmp_cache, rng):

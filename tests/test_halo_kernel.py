@@ -103,6 +103,37 @@ def test_kernel_matches_algorithm1(geom, rng):
             np.asarray(y[n]), y_ref.astype(np.float32), rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("geom", ALG1_GEOMS)
+def test_batch_fused_kernel_matches_algorithm1(geom, rng):
+    """The batch-tiled grid (t_n=2, batch 5: ragged last batch tile) is
+    bit-compatible with the per-image Algorithm 1 oracle on the same
+    awkward shapes."""
+    ih, iw, ci, co, k, s, p, t = geom
+    x = rng.randn(5, ih, iw, ci).astype(np.float32)
+    w = (rng.randn(k, k, ci, co) * 0.1).astype(np.float32)
+    b = (rng.randn(co) * 0.1).astype(np.float32)
+    y = deconv2d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), s, p,
+                 t_oh=t, t_ow=t, t_n=2)
+    for n in range(x.shape[0]):
+        y_ref, _ = deconv2d_algorithm1_numpy(x[n], w, b, s, p)
+        np.testing.assert_allclose(
+            np.asarray(y[n]), y_ref.astype(np.float32), rtol=1e-4, atol=1e-4)
+
+
+def test_x_blockspec_batch_tile():
+    """The batch-tiled x BlockSpec streams t_n images' windows per program;
+    the (unblocked) index map advances by t_n elements on the batch dim."""
+    k, s, p = 4, 2, 1
+    t_oh, t_ci, t_n = 8, 32, 4
+    ht = halo_tile(t_oh, k, s, p)
+    bs = x_halo_blockspec(ht, ht, t_ci, t_n)
+    assert tuple(bs.block_shape) == (t_n, ht.extent, ht.extent, t_ci)
+    for nb, oh_t, ow_t, ci_t in [(0, 0, 0, 0), (3, 1, 2, 1), (7, 5, 0, 2)]:
+        got = bs.index_map(nb, oh_t, ow_t, 0, ci_t)
+        assert got == (nb * t_n, oh_t * ht.step + ht.base,
+                       ow_t * ht.step + ht.base, ci_t * t_ci)
+
+
 @pytest.mark.parametrize("activation", ["relu", "tanh"])
 def test_fused_epilogue_matches_unfused(activation, rng):
     x = jnp.array(rng.randn(2, 5, 7, 8), jnp.float32)
@@ -155,3 +186,40 @@ def test_kernel_vmem_bytes_monotone_in_tiles():
     small = kernel_vmem_bytes(g, 8, 8, 64, 64)
     big = kernel_vmem_bytes(g, 32, 32, 256, 256)
     assert small < big
+    # ...and in the batch tile: x/y/acc scale with t_n, weights do not
+    assert kernel_vmem_bytes(g, 8, 8, 64, 64, t_n=4) > small
+    assert kernel_vmem_bytes(g, 8, 8, 64, 64, t_n=4) < 4 * small
+
+
+def test_batched_traffic_amortizes_weights():
+    """The batch-fused traffic model: per-image input/output bytes are
+    t_n-invariant while per-image *weight* bytes fall by t_n (one slab per
+    CI step serves t_n images) — the spatio-temporal amortization."""
+    from repro.core.tiling import deconv_traffic_batched
+
+    g = DeconvGeometry(1, 1, 100, 1024, 4, 1, 0)  # CelebA L1
+    batch = 64
+    t1 = deconv_traffic_batched(g, batch, 1, 4, 4, 104, 128)
+    t64 = deconv_traffic_batched(g, batch, 64, 4, 4, 104, 128)
+    # total bytes strictly fall with batch fusion...
+    assert t64.total_bytes < t1.total_bytes
+    # ...input stream per image unchanged (n_tiles shrank by 64, window x64)
+    assert t64.in_bytes_per_tile == 64 * t1.in_bytes_per_tile
+    assert t64.n_tiles * 64 == t1.n_tiles
+    # ...and the whole saving is the amortized weight stream
+    w1 = t1.n_tiles * t1.n_ci_steps * t1.w_bytes_per_tile
+    w64 = t64.n_tiles * t64.n_ci_steps * t64.w_bytes_per_tile
+    assert w64 * 64 == w1
+    assert t1.total_bytes - t64.total_bytes == w1 - w64
+
+
+def test_batched_attainable_improves_on_row_starved_layer():
+    """DSE: on the 4x4-output fat-channel CelebA L1 (16 rows vs the 128-row
+    MXU) the modeled attainable throughput strictly improves with t_n."""
+    from repro.core.dse import TPU_V5E, tile_attainable
+
+    g = DeconvGeometry(1, 1, 100, 1024, 4, 1, 0)
+    a1 = tile_attainable(g, 4, 4, 104, 128, TPU_V5E, t_n=1, batch=64)
+    a8 = tile_attainable(g, 4, 4, 104, 128, TPU_V5E, t_n=8, batch=64)
+    a64 = tile_attainable(g, 4, 4, 104, 128, TPU_V5E, t_n=64, batch=64)
+    assert a1.attainable_ops < a8.attainable_ops < a64.attainable_ops

@@ -40,6 +40,94 @@ def test_continuous_batching_slots(rng):
         assert r.out is not None and r.out.shape == (3,)
 
 
+def test_continuous_batching_midflight_admission(rng):
+    """Satellite fix: a queued request is admitted the moment a slot frees
+    — mid-flight — instead of waiting for the whole chunk.  With budgets
+    (1, 5, 3) on 2 slots, chunked scheduling needs max(1,5) + 3 = 8
+    sampling steps; continuous batching finishes in 5.  Outputs are pinned
+    to the greedy full-recompute oracle: solo semantics for requests
+    admitted without padding, and the padded-history continuation for the
+    mid-flight admission (left-pad tokens are visible to the causal,
+    unmasked model — the engine's documented padding semantics)."""
+    from repro.models.transformer import apply_lm as _apply_lm
+
+    cfg = reduced_config("chatglm3-6b")
+    params, _ = init_lm(jax.random.PRNGKey(1), cfg)
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32)
+    prompts = [rng.randint(1, cfg.vocab_size, (4,)).astype(np.int32)
+               for _ in range(3)]
+    reqs = [Request(prompt=p, max_new_tokens=m)
+            for p, m in zip(prompts, (1, 5, 3))]
+    done = eng.serve(reqs)
+    assert len(done) == 3
+    assert eng.sample_steps == 5          # chunked would take 8
+    assert eng.prefill_steps == 2         # t=0 admission + mid-flight one
+
+    def greedy_oracle(seq, n_new):
+        seq = jnp.asarray(np.asarray(seq, np.int32))[None]
+        out = []
+        for _ in range(n_new):
+            logits, _, _ = _apply_lm(params, cfg, seq, mode="train")
+            nxt = jnp.argmax(logits[:, -1], -1)
+            out.append(int(nxt[0]))
+            seq = jnp.concatenate([seq, nxt[:, None].astype(jnp.int32)], 1)
+        return np.asarray(out, np.int32)
+
+    # slots filled at t=0: exact solo semantics
+    np.testing.assert_array_equal(reqs[0].out, greedy_oracle(prompts[0], 1))
+    np.testing.assert_array_equal(reqs[1].out, greedy_oracle(prompts[1], 5))
+    # admitted when req 0's slot freed (other slot at history 5): the
+    # oracle continuation of its 1-token-left-padded history
+    np.testing.assert_array_equal(
+        reqs[2].out, greedy_oracle([0] + list(prompts[2]), 3))
+
+
+def test_continuous_batching_heterogeneous_budgets(rng):
+    """Every request generates exactly its own budget (no slot burns steps
+    on a chunk-max budget) and all requests complete."""
+    cfg = reduced_config("chatglm3-6b")
+    params, _ = init_lm(jax.random.PRNGKey(2), cfg)
+    eng = ServeEngine(cfg, params, batch_size=3, max_len=48)
+    budgets = [2, 7, 1, 4, 3, 1, 5]
+    reqs = [Request(prompt=rng.randint(1, cfg.vocab_size, (5,))
+                    .astype(np.int32), max_new_tokens=m) for m in budgets]
+    done = eng.serve(reqs)
+    assert len(done) == len(budgets)
+    for r in done:
+        assert r.out.shape == (r.max_new_tokens,)
+    # work-conserving bound: total sampled tokens can't exceed what a
+    # perfectly packed schedule plus slot-idle tails would produce, and is
+    # strictly below the chunked schedule's sum of per-chunk maxima
+    chunked = 7 + 3 + 5   # chunks (2,7,1), (4,3,1), (5) at chunk-max each
+    assert eng.sample_steps < chunked
+
+
+def test_continuous_batching_zero_budget_and_overflow(rng):
+    """Review regressions: a max_new_tokens=0 request completes (empty
+    output) instead of pinning its slot forever, and a history+budget that
+    would overflow the KV cache fails loudly instead of silently clamping
+    cache writes."""
+    import pytest
+
+    cfg = reduced_config("chatglm3-6b")
+    params, _ = init_lm(jax.random.PRNGKey(1), cfg)
+    eng = ServeEngine(cfg, params, batch_size=2, max_len=32)
+    prompt = rng.randint(1, cfg.vocab_size, (4,)).astype(np.int32)
+    reqs = [Request(prompt=prompt, max_new_tokens=0),
+            Request(prompt=prompt, max_new_tokens=2),
+            Request(prompt=prompt, max_new_tokens=0)]
+    done = eng.serve(reqs)
+    assert len(done) == 3
+    assert reqs[0].out.shape == (0,) and reqs[2].out.shape == (0,)
+    assert reqs[1].out.shape == (2,)
+    # all-zero-budget stream terminates without touching the model
+    done2 = eng.serve([Request(prompt=prompt, max_new_tokens=0)])
+    assert len(done2) == 1 and eng.sample_steps == 0
+    # budget overflow: 4-token prompt + 40 new > max_len=32
+    with pytest.raises(AssertionError, match="max_len"):
+        eng.serve([Request(prompt=prompt, max_new_tokens=40)])
+
+
 def test_sampling_modes(rng):
     logits = jnp.array(rng.randn(4, 50), jnp.float32)
     g = sample(logits, jax.random.PRNGKey(0), temperature=0.0)
