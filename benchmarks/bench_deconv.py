@@ -283,13 +283,92 @@ def serving_sweep_rows(reps: int = 3, stream=(3, 5, 1, 8, 2, 6, 4, 7)):
     }
 
 
+def sharded_rows(devices: int = 8, stream=(5, 8, 19)):
+    """Mesh-sharded bucket serving on forced host devices.
+
+    Runs in a subprocess because the XLA device-count flag must be set
+    before jax initializes (this process already holds a 1-device CPU
+    client).  Reports bucket rounding, throughput (global and per device)
+    and numerical parity vs the single-device engine; interpret-mode
+    timings are a dispatch-count proxy, the structure (devices x
+    per-shard tiles) is what carries over to TPU."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    import repro
+
+    src_dir = os.path.dirname(os.path.dirname(
+        os.path.abspath(repro.__file__)))
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={devices}")
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import json
+        import jax
+        import numpy as np
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models.dcnn import MNIST_DCNN, generator_init
+        from repro.serve.engine import DcnnServeEngine
+
+        params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+        mesh = make_serving_mesh()
+        eng = DcnnServeEngine(MNIST_DCNN, params, backend="pallas",
+                              mesh=mesh, buckets=(1, 2, 4, 8, 16),
+                              warmup=True)
+        ref = DcnnServeEngine(MNIST_DCNN, params, backend="pallas",
+                              buckets=eng.buckets)
+        rng = np.random.RandomState(0)
+        err = 0.0
+        for n in {tuple(stream)}:
+            z = rng.randn(n, MNIST_DCNN.z_dim).astype(np.float32)
+            err = max(err, float(np.abs(eng.generate(z)
+                                        - ref.generate(z)).max()))
+        print(json.dumps({{
+            "devices": eng.n_devices,
+            "buckets": list(eng.buckets),
+            "stream": list({tuple(stream)}),
+            "compiles": eng.total_compiles,
+            "padded_images": eng.stats["padded_images"],
+            "parity_max_err": err,
+            "throughput": {{str(k): v for k, v in
+                            eng.throughput().items()}},
+        }}))
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=1800,
+        env={**os.environ, "PYTHONPATH": src_dir},
+    )
+    if proc.returncode != 0:
+        return {"error": proc.stderr[-2000:]}
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def print_sharded(row):
+    if not row:
+        return
+    print("# mesh-sharded bucket serving (MNIST generator, forced host "
+          "devices; per-shard autotuned tiles)")
+    if "error" in row:
+        print(f"sharded bench failed:\n{row['error']}")
+        return
+    tput = {k: f"{v['img_per_s']:.1f}" for k, v in row["throughput"].items()}
+    print(f"devices={row['devices']} buckets={row['buckets']} "
+          f"compiles={row['compiles']} padded={row['padded_images']} "
+          f"parity_err={row['parity_max_err']:.2e} img/s per bucket={tput}")
+
+
 def write_json(path: str, table2, traffic, autotune, scaling,
-               batch_sweep=None, serving=None):
+               batch_sweep=None, serving=None, sharded=None):
     with open(path, "w") as f:
         json.dump({"table2": table2, "traffic": traffic,
                    "autotune": autotune, "scaling": scaling,
                    "batch_sweep": batch_sweep or [],
-                   "serving": serving or {}},
+                   "serving": serving or {},
+                   "sharded": sharded or {}},
                   f, indent=1, default=float)
     print(f"[bench_deconv] wrote {path}")
 
@@ -365,6 +444,7 @@ def main(reps: int = 50, smoke: bool = False,
         a_rows = autotune_rows(reps=3, batch=1)
         b_rows = batch_sweep_rows(batches=(8, 64), reps=3)
         serving = serving_sweep_rows(reps=1)
+        sharded = sharded_rows(devices=8, stream=(5, 8))
         print_traffic(t_rows)
         print()
         print_scaling(s_rows)
@@ -374,7 +454,10 @@ def main(reps: int = 50, smoke: bool = False,
         print_batch_sweep(b_rows)
         print()
         print_serving(serving)
-        write_json(json_path, [], t_rows, a_rows, s_rows, b_rows, serving)
+        print()
+        print_sharded(sharded)
+        write_json(json_path, [], t_rows, a_rows, s_rows, b_rows, serving,
+                   sharded)
         return []
     rows = run(reps)
     print("# Table II analogue: GOps/s mean (cv) per layer; cv = run-to-run "
@@ -406,7 +489,11 @@ def main(reps: int = 50, smoke: bool = False,
     print()
     serving = serving_sweep_rows(reps=3)
     print_serving(serving)
-    write_json(json_path, rows, t_rows, a_rows, s_rows, b_rows, serving)
+    print()
+    sharded = sharded_rows(devices=8)
+    print_sharded(sharded)
+    write_json(json_path, rows, t_rows, a_rows, s_rows, b_rows, serving,
+               sharded)
     return rows
 
 

@@ -25,6 +25,17 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume (params + optimizer states + step) from "
+                         "the newest checkpoint in --ckpt-dir")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard the critic/generator steps over every "
+                         "visible device (data-parallel shard_map)")
+    ap.add_argument("--backend", default="reverse_loop",
+                    choices=["reverse_loop", "xla", "pallas"],
+                    help="generator forward for the training loss "
+                         "(pallas = batch-fused serving kernels with the "
+                         "reverse-loop VJP)")
     args = ap.parse_args()
 
     ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
@@ -33,12 +44,20 @@ def main():
     src = image_source("mnist", seed=0, batch=args.batch)
     ck = AsyncCheckpointer(ckpt_dir, keep=2)
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh()
+        print(f"mesh: {mesh.shape}")
+
     gp, dp, hist = train_wgan(
         cfg, src, steps=args.steps, key=jax.random.PRNGKey(0),
         g_opt=AdamW(lr=2e-4, b1=0.5, b2=0.9),
         d_opt=AdamW(lr=2e-4, b1=0.5, b2=0.9),
         n_critic=5, log_every=max(args.steps // 10, 1),
-        ckpt=ck, ckpt_every=max(args.steps // 4, 1))
+        ckpt=ck, ckpt_every=max(args.steps // 4, 1),
+        backend=args.backend, mesh=mesh,
+        resume_from=ckpt_dir if args.resume else None)
     ck.wait()
 
     for h in hist:
@@ -49,7 +68,10 @@ def main():
     # quality: MMD between generated samples and held-out synthetic data
     z = jax.random.normal(jax.random.PRNGKey(7), (64, cfg.z_dim))
     fake = generator_apply(gp, cfg, z).reshape(64, -1)
-    real = jnp.asarray(src.batch(10_000)["images"][:64]).reshape(64, -1)
+    # enough held-out batches to reach 64 rows whatever --batch is
+    held = np.concatenate([src.batch(10_000 + i)["images"]
+                           for i in range(-(-64 // args.batch))])[:64]
+    real = jnp.asarray(held).reshape(64, -1)
     print(f"\nfinal MMD(fake, real) = {float(mmd(real, fake)):.4f}")
     print(f"checkpoints in {ckpt_dir}")
 

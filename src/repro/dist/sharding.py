@@ -114,6 +114,41 @@ def tree_shardings(mesh, rules: Rules, shapes_tree, specs_tree):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def replicated_specs(tree):
+    """All-replicated logical spec tree mirroring ``tree`` (arrays or
+    ShapeDtypeStructs): every dim maps to None.  Feed to `tree_shardings`
+    when a param tree has no sharded axes — e.g. the DCNN generator/critic
+    weights, which are small enough to replicate on every device."""
+    return jax.tree_util.tree_map(
+        lambda a: (None,) * len(getattr(a, "shape", ())), tree)
+
+
+def data_axis_size(mesh, rules: Rules) -> int:
+    """Total data-parallel extent the batch dim shards over (1 when the
+    mesh or the batch rule is absent)."""
+    if mesh is None:
+        return 1
+    axis = rules.get("batch")
+    if axis is None:
+        return 1
+    return _axis_size(mesh, axis)
+
+
+def shard_index(mesh, rules: Rules):
+    """Linearized index of the current batch shard, for use *inside* a
+    shard_map body: 0 .. data_axis_size-1, row-major over the batch axes
+    (matches how a batch-leading array is laid out across them)."""
+    axis = rules.get("batch")
+    if axis is None:
+        return 0
+    flat = axis if isinstance(axis, tuple) else (axis,)
+    idx = 0
+    for a in flat:
+        idx = idx * mesh.shape.get(a, 1) + (
+            jax.lax.axis_index(a) if a in mesh.shape else 0)
+    return idx
+
+
 def batch_pspec(mesh, rules: Rules, batch_size: int, ndim: int) -> P:
     """PartitionSpec for a batch-leading array: dim 0 on the batch axes when
     divisible, everything else replicated."""

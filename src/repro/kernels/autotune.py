@@ -260,6 +260,37 @@ def fallback_tiles(
     )
 
 
+def network_tiles(
+    cfg,
+    dtype=None,
+    backend: str = "pallas",
+    batch: int = 1,
+    refine: bool = False,
+    autotune: bool = True,
+    device: Device = TPU_V5E,
+) -> Optional[Dict[int, TileChoice]]:
+    """Per-layer tile choices for a whole generator network.
+
+    ``cfg`` is any config exposing ``geometries()`` (and ``jdtype`` when
+    ``dtype`` is omitted) — in practice a ``models.dcnn.DcnnConfig``.
+    ``batch`` is the batch size each layer's kernel will actually see: a
+    serving bucket on one device, or the *per-device sub-batch* when the
+    caller shards the bucket across a mesh (the DSE then picks ``t_n``
+    against the shard, not the global batch).  Returns None for backends
+    without tile factors."""
+    if backend not in ("pallas", "pallas_sparse"):
+        return None
+    if dtype is None:
+        dtype = cfg.jdtype
+    if autotune:
+        return {i: choose_tiles(g, dtype, backend=backend, refine=refine,
+                                device=device, batch=batch)
+                for i, g in enumerate(cfg.geometries())}
+    itemsize = np.dtype(dtype).itemsize
+    return {i: fallback_tiles(g, itemsize, device.onchip_bytes, batch=batch)
+            for i, g in enumerate(cfg.geometries())}
+
+
 # ---------------------------------------------------------------------------
 # on-device timing refinement
 # ---------------------------------------------------------------------------

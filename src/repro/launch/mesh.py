@@ -28,6 +28,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
+def make_serving_mesh(data: int = 0):
+    """Pure data-parallel mesh for the DCNN bucket-serving / WGAN paths:
+    one ``data`` axis over ``data`` devices (default: every visible
+    device).  Params replicate; only the batch dim shards."""
+    n = data or len(jax.devices())
+    return _make_mesh((n,), ("data",))
+
+
 def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small mesh for host-device tests (subprocesses set
     --xla_force_host_platform_device_count accordingly)."""

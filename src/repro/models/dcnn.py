@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from ..core.deconv import deconv2d_reverse_loop, deconv2d_zero_insertion
 from ..core.tiling import DeconvGeometry
+from ..dist.context import constrain
 from . import nn
 
 
@@ -125,6 +126,7 @@ def generator_apply(
     result for backend="pallas_sparse" (see serve.DcnnServeEngine).
     """
     x = z.reshape(z.shape[0], 1, 1, cfg.z_dim).astype(cfg.jdtype)
+    x = constrain(x, "batch", None, None, None)
     for i, l in enumerate(cfg.layers):
         w, b = p[f"l{i}"]["w"], p[f"l{i}"]["b"]
         tiles = _tile_kwargs((tile_overrides or {}).get(i))
@@ -146,7 +148,53 @@ def generator_apply(
             raise ValueError(backend)
         if not fused:
             x = jnp.tanh(x) if l.activation == "tanh" else jax.nn.relu(x)
+        x = constrain(x, "batch", None, None, None)
     return x
+
+
+def make_fused_generator(
+    cfg: DcnnConfig,
+    tiles: Optional[Dict[int, Any]] = None,
+    fwd_backend: str = "pallas",
+    bwd_backend: str = "reverse_loop",
+):
+    """Differentiable generator whose *primal* runs the batch-fused Pallas
+    serving kernels and whose *cotangent* runs through the reverse-loop
+    formulation's VJP.
+
+    The two backends compute the same function (pinned by the backend
+    parity tests), so the gradient is consistent with the forward up to
+    kernel-level float reassociation — which lets the WGAN training step
+    fill the MXU exactly the way serving does (``tiles`` carries the
+    autotuned per-layer batch tile ``t_n``) while staying trainable.  The
+    backward pass rematerializes the reverse-loop forward (one extra
+    forward per VJP; nothing from the Pallas residuals is reused).
+
+    ``pallas_sparse`` is deliberately rejected: its zero-skip schedule is
+    compiled against *frozen* weights, which training mutates every step.
+    """
+    if fwd_backend == "pallas_sparse":
+        raise ValueError(
+            "pallas_sparse is inference-only: the static zero-skip plan is "
+            "derived from frozen weights, which training updates each step")
+
+    @jax.custom_vjp
+    def apply(p, z):
+        return generator_apply(p, cfg, z, backend=fwd_backend,
+                               tile_overrides=tiles)
+
+    def fwd(p, z):
+        return apply(p, z), (p, z)
+
+    def bwd(res, ct):
+        p, z = res
+        _, vjp = jax.vjp(
+            lambda p_, z_: generator_apply(p_, cfg, z_, backend=bwd_backend),
+            p, z)
+        return vjp(ct)
+
+    apply.defvjp(fwd, bwd)
+    return apply
 
 
 # ---------------------------------------------------------------------------
@@ -182,5 +230,6 @@ def critic_apply(p, cfg: DcnnConfig, x: jax.Array) -> jax.Array:
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
         ) + p[f"c{i}"]["b"]
         x = jax.nn.leaky_relu(x, 0.2)
+        x = constrain(x, "batch", None, None, None)
     x = x.reshape(x.shape[0], -1)
     return nn.dense(p["head"], x)[:, 0]

@@ -17,6 +17,7 @@ the largest fitting bucket."""
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -185,13 +186,23 @@ def pow2_buckets(max_batch: int) -> Tuple[int, ...]:
     return tuple(sorted(set(out)))
 
 
+def shard_aligned_buckets(buckets: Sequence[int], n_shards: int
+                          ) -> Tuple[int, ...]:
+    """Round every bucket up to a multiple of the data-shard count (so each
+    device owns an equal sub-batch) and dedupe.  n_shards=1 is identity."""
+    if n_shards <= 1:
+        return tuple(sorted(set(int(b) for b in buckets)))
+    up = lambda b: -(-int(b) // n_shards) * n_shards
+    return tuple(sorted({up(b) for b in buckets}))
+
+
 class DcnnServeEngine:
     """The paper's inference workload: batched image generation, served
     through compile-once batch buckets.
 
-    * **Bucketing** — request batches are padded up to the smallest bucket
-      that fits (oversized requests are chunked at the largest bucket), so
-      a mixed-size request stream compiles at most ``len(buckets)``
+    * **Bucketing** — request batches are decomposed by a cost-aware
+      chunk plan (`plan_chunks`: padded rows vs per-call overhead), so a
+      mixed-size request stream compiles at most ``len(buckets)``
       generator executables — never one per batch shape.
     * **Per-bucket tiles** — for the pallas backends each bucket's tile
       assignment is resolved against that bucket's batch size, letting the
@@ -208,6 +219,14 @@ class DcnnServeEngine:
       largest fitting buckets; ``collect`` returns a request's images
       (draining on demand).
 
+    * **Mesh sharding** — with ``mesh=`` each bucket's batch is sharded
+      along the data axis (`dist.sharding` rules): params are replicated
+      via `tree_shardings`, the z batch splits per `batch_pspec`, buckets
+      are rounded up to multiples of the device count so every device owns
+      an equal sub-batch, and the autotuner resolves tiles (incl. ``t_n``)
+      against the *per-device* sub-batch geometry.  ``stats`` /
+      ``throughput()`` then report per-device rates.
+
     ``trace_counts`` maps bucket -> number of times its generator was
     traced (== compiled); tests pin the no-per-request-recompilation
     guarantee on it."""
@@ -216,12 +235,31 @@ class DcnnServeEngine:
                  autotune: bool = True, refine: bool = False,
                  max_batch: int = 64,
                  buckets: Optional[Sequence[int]] = None,
-                 warmup: bool = False, donate: bool = True):
+                 warmup: bool = False, donate: bool = True,
+                 mesh=None, rules=None, call_overhead_rows: int = 8):
         self.cfg = cfg
-        self.params = params
         self.backend = backend
-        self.buckets = (tuple(sorted(set(int(b) for b in buckets)))
-                        if buckets else pow2_buckets(max_batch))
+        # chunk-planning knob: one kernel dispatch is costed like computing
+        # this many extra rows (trades padded-row waste against call count)
+        self.call_overhead_rows = call_overhead_rows
+        self.mesh = mesh
+        if mesh is not None:
+            from ..dist.sharding import (data_axis_size, make_rules,
+                                         replicated_specs, tree_shardings)
+            self.rules = rules if rules is not None else make_rules("tp")
+            self.n_devices = data_axis_size(mesh, self.rules)
+            # params live replicated on the mesh from the start: steady-state
+            # serving never re-transfers them per call
+            self._param_shardings = tree_shardings(
+                mesh, self.rules, params, replicated_specs(params))
+            params = jax.device_put(params, self._param_shardings)
+        else:
+            self.rules = rules
+            self.n_devices = 1
+            self._param_shardings = None
+        self.params = params
+        self.buckets = shard_aligned_buckets(
+            buckets if buckets else pow2_buckets(max_batch), self.n_devices)
         if self.buckets[0] < 1:
             raise ValueError(f"buckets must be positive: {self.buckets}")
         self.max_bucket = self.buckets[-1]
@@ -237,23 +275,28 @@ class DcnnServeEngine:
         self._pending: List[Tuple[int, np.ndarray]] = []
         self._results: Dict[int, np.ndarray] = {}
         self._next_id = 0
-        self.stats = {"generate_calls": 0, "images": 0, "padded_images": 0}
+        self.stats = {"generate_calls": 0, "images": 0, "padded_images": 0,
+                      "device_count": self.n_devices}
+        # per-bucket serving observability: wall-clock + image counters so
+        # the engine *learns* throughput (global and per-device) per bucket
+        self.bucket_stats: Dict[int, Dict[str, float]] = {}
         if warmup:
             for b in self.buckets:
                 self._warmup_bucket(b)
 
     # -- per-bucket executable construction ----------------------------
-    def _tiles_for(self, bucket: int) -> Optional[dict]:
-        if self.backend not in ("pallas", "pallas_sparse"):
-            return None
-        from ..kernels.autotune import choose_tiles, fallback_tiles
+    def shard_batch(self, bucket: int) -> int:
+        """The batch one device actually runs for a bucket (== the bucket
+        on a single device); tile choices are fitted to this, not to the
+        global bucket."""
+        return bucket // self.n_devices
 
-        if self._autotune:
-            return {i: choose_tiles(g, self.cfg.jdtype, backend=self.backend,
-                                    refine=self._refine, batch=bucket)
-                    for i, g in enumerate(self.cfg.geometries())}
-        return {i: fallback_tiles(g, self.cfg.jdtype.itemsize, batch=bucket)
-                for i, g in enumerate(self.cfg.geometries())}
+    def _tiles_for(self, bucket: int) -> Optional[dict]:
+        from ..kernels.autotune import network_tiles
+
+        return network_tiles(self.cfg, self.cfg.jdtype, backend=self.backend,
+                             batch=self.shard_batch(bucket),
+                             refine=self._refine, autotune=self._autotune)
 
     def _sparse_plans_for(self, tiles: dict) -> Optional[dict]:
         if self.backend != "pallas_sparse":
@@ -278,16 +321,44 @@ class DcnnServeEngine:
             plans = self._sparse_plans_for(tiles) if tiles else None
             self.tile_choices[bucket] = tiles
 
-            def fn(p, z, _b=bucket, _tiles=tiles, _plans=plans):
-                # tracing happens exactly once per compilation: the counter
-                # is the no-per-request-recompilation acceptance probe
-                self.trace_counts[_b] = self.trace_counts.get(_b, 0) + 1
+            def apply(p, z, _tiles=tiles, _plans=plans):
                 return generator_apply(p, self.cfg, z, backend=self.backend,
                                        tile_overrides=_tiles,
                                        sparse_plans=_plans)
 
-            self._fns[bucket] = (jax.jit(fn, donate_argnums=(1,))
-                                 if self._donate else jax.jit(fn))
+            if self.mesh is not None:
+                # SPMD: every device runs the same per-shard executable on
+                # its bucket/n_devices rows (the tiles above were fitted to
+                # exactly that sub-batch).  check_rep=False: pallas_call has
+                # no replication rule.
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import NamedSharding, PartitionSpec as P
+
+                from ..dist.sharding import batch_pspec
+
+                baxes = self.rules.get("batch", "data")
+                apply = shard_map(apply, mesh=self.mesh,
+                                  in_specs=(P(), P(baxes)),
+                                  out_specs=P(baxes), check_rep=False)
+                z_sh = NamedSharding(
+                    self.mesh, batch_pspec(self.mesh, self.rules, bucket, 2))
+                img_sh = NamedSharding(
+                    self.mesh, batch_pspec(self.mesh, self.rules, bucket, 4))
+                shardings = dict(
+                    in_shardings=(self._param_shardings, z_sh),
+                    out_shardings=img_sh)
+            else:
+                shardings = {}
+
+            def fn(p, z, _b=bucket, _apply=apply):
+                # tracing happens exactly once per compilation: the counter
+                # is the no-per-request-recompilation acceptance probe
+                self.trace_counts[_b] = self.trace_counts.get(_b, 0) + 1
+                return _apply(p, z)
+
+            self._fns[bucket] = jax.jit(
+                fn, **shardings,
+                **(dict(donate_argnums=(1,)) if self._donate else {}))
         return self._fns[bucket]
 
     def _warmup_bucket(self, bucket: int) -> None:
@@ -303,18 +374,59 @@ class DcnnServeEngine:
                 return b
         return self.max_bucket
 
+    def plan_chunks(self, n: int) -> List[Tuple[int, int]]:
+        """Chunk plan for an n-row batch: ``[(take, bucket), ...]`` with
+        ``sum(take) == n``.
+
+        Full max-bucket chunks are sliced first; the sub-max tail is then
+        planned *cost-aware*: at each level the smallest covering bucket
+        (one padded call) competes with slicing the largest exact-fitting
+        bucket and recursing, costed as computed rows plus
+        ``call_overhead_rows`` per kernel dispatch.  So a 36-row tail at
+        buckets 1..64 runs 32+4 (the pre-fix loop ran one 64-row call —
+        28 padded rows), while a 63-row tail stays one padded 64-call
+        instead of fragmenting into six row-starved small-bucket calls."""
+        if n < 0:
+            raise ValueError(f"negative batch: {n}")
+        plan: List[Tuple[int, int]] = []
+        remaining = n
+        while remaining >= self.max_bucket:
+            plan.append((self.max_bucket, self.max_bucket))
+            remaining -= self.max_bucket
+        plan.extend(self._plan_tail(remaining))
+        return plan
+
+    def _plan_cost(self, plan: List[Tuple[int, int]]) -> int:
+        return sum(b for _, b in plan) + self.call_overhead_rows * len(plan)
+
+    def _plan_tail(self, r: int) -> List[Tuple[int, int]]:
+        """Cost-aware plan for a tail below the largest bucket (recursion
+        depth is bounded by len(buckets): each slice at least halves what
+        the remaining buckets can cover)."""
+        if r == 0:
+            return []
+        cover = self.bucket_for(r)
+        best = [(r, cover)] if cover >= r else None
+        fit = [b for b in self.buckets if b <= r]
+        if fit:
+            b = max(fit)
+            cand = [(b, b)] + self._plan_tail(r - b)
+            if best is None or self._plan_cost(cand) < self._plan_cost(best):
+                best = cand
+        assert best is not None, (r, self.buckets)
+        return best
+
     # -- synchronous path ----------------------------------------------
     def generate(self, z: np.ndarray) -> np.ndarray:
-        """z: (B, z_dim) for ANY B: padded to the bucket set (and chunked at
-        the largest bucket), so no batch size ever triggers a recompile."""
+        """z: (B, z_dim) for ANY B: chunked/padded to the bucket set via
+        `plan_chunks`, so no batch size ever triggers a recompile."""
         z = np.asarray(z, dtype=self.cfg.dtype)
         n = z.shape[0]
+        plan = self.plan_chunks(n)
+        pad_before = self.stats["padded_images"]
         outs: List[np.ndarray] = []
         i = 0
-        while i < n:
-            remaining = n - i
-            bucket = self.bucket_for(remaining)
-            take = min(bucket, remaining)
+        for take, bucket in plan:
             chunk = z[i:i + take]
             if take < bucket:
                 chunk = np.concatenate(
@@ -322,12 +434,43 @@ class DcnnServeEngine:
                                      z.dtype)], axis=0)
                 self.stats["padded_images"] += bucket - take
             fn = self._get_fn(bucket)
+            traces_before = self.trace_counts.get(bucket, 0)
+            t0 = time.perf_counter()
             y = np.asarray(fn(self.params, jnp.asarray(chunk)))
+            dt = time.perf_counter() - t0
+            if self.trace_counts.get(bucket, 0) == traces_before:
+                # steady-state call: a call that traced (compiled) would
+                # poison the learned rates by orders of magnitude
+                bs = self.bucket_stats.setdefault(
+                    bucket, {"calls": 0, "images": 0, "seconds": 0.0})
+                bs["calls"] += 1
+                bs["images"] += take
+                bs["seconds"] += dt
             outs.append(y[:take])
             i += take
+        # the accounting is exact by construction; pin it against the plan
+        assert self.stats["padded_images"] - pad_before == sum(
+            b - t for t, b in plan), (plan, self.stats)
         self.stats["generate_calls"] += 1
         self.stats["images"] += n
-        return (np.concatenate(outs, axis=0) if len(outs) != 1 else outs[0])
+        return (np.concatenate(outs, axis=0) if len(outs) != 1
+                else outs[0])
+
+    def throughput(self) -> Dict[int, Dict[str, float]]:
+        """Learned per-bucket *steady-state* serving rates (compiling
+        calls are excluded from the timers): useful images/s overall and
+        per device (the mesh analogue of the paper's per-PE utilization)."""
+        out = {}
+        for bucket, bs in self.bucket_stats.items():
+            if bs["seconds"] <= 0.0:
+                continue
+            rate = bs["images"] / bs["seconds"]
+            out[bucket] = {
+                "img_per_s": rate,
+                "img_per_s_per_device": rate / self.n_devices,
+                "calls": bs["calls"],
+            }
+        return out
 
     # -- micro-batching queue --------------------------------------------
     def submit(self, z: np.ndarray) -> int:
@@ -342,9 +485,9 @@ class DcnnServeEngine:
 
     def drain(self) -> None:
         """Run everything pending as one coalesced stream: all queued rows
-        are concatenated and generated at the largest fitting buckets, so
-        ten 3-image requests cost three bucket-32 calls' padding, not ten
-        bucket-4 calls."""
+        are concatenated and generated through the cost-aware
+        `plan_chunks`, so ten 3-image requests run as a few large-bucket
+        calls, not ten bucket-4 calls."""
         if not self._pending:
             return
         reqs, self._pending = self._pending, []

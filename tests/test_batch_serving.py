@@ -126,18 +126,56 @@ def test_mixed_stream_compiles_at_most_len_buckets(tmp_cache, rng):
 
 
 def test_bucket_padding_non_pow2_parity(tmp_cache, rng):
-    """A non-power-of-two request (6 -> bucket 8) returns exactly its own
-    images — the pad rows never leak into the result."""
+    """A non-power-of-two request (6 -> one padded bucket-8 call: two pad
+    rows beat an extra dispatch) returns exactly its own images — the pad
+    rows never leak into the result."""
     p, _ = generator_init(jax.random.PRNGKey(0), MNIST_SMALL)
     eng = DcnnServeEngine(MNIST_SMALL, p, backend="pallas",
                           buckets=(1, 2, 4, 8))
     z = rng.randn(6, MNIST_SMALL.z_dim).astype(np.float32)
+    assert eng.plan_chunks(6) == [(6, 8)]
     imgs = eng.generate(z)
     ref = np.asarray(generator_apply(p, MNIST_SMALL, jnp.asarray(z),
                                      backend="reverse_loop"))
     np.testing.assert_allclose(imgs, ref, rtol=2e-3, atol=2e-3)
     assert eng.stats["padded_images"] == 2
     assert eng.bucket_for(6) == 8
+
+
+def test_tail_chunk_plan_minimizes_padding(tmp_cache, rng):
+    """Regression: the old loop jumped to the smallest *covering* bucket
+    for any remainder, so a 36-row tail at buckets 1..64 ran one 64-row
+    call (28 padded rows) instead of exact 32+4 chunks.  The plan is
+    cost-aware, not exact-at-any-price: a near-bucket tail (63) stays one
+    padded call rather than fragmenting into six row-starved ones."""
+    p, _ = generator_init(jax.random.PRNGKey(0), MNIST_SMALL)
+    eng = DcnnServeEngine(MNIST_SMALL, p, backend="pallas",
+                          buckets=(1, 2, 4, 8, 16, 32, 64))
+    assert eng.plan_chunks(36) == [(32, 32), (4, 4)]
+    assert eng.plan_chunks(65) == [(64, 64), (1, 1)]
+    assert eng.plan_chunks(100) == [(64, 64), (32, 32), (4, 4)]
+    assert eng.plan_chunks(63) == [(63, 64)]
+    assert eng.plan_chunks(48) == [(32, 32), (16, 16)]
+    # padding arises only below the smallest bucket
+    eng8 = DcnnServeEngine(MNIST_SMALL, p, backend="pallas",
+                           buckets=(8, 16))
+    assert eng8.plan_chunks(21) == [(16, 16), (5, 8)]
+    z = rng.randn(21, MNIST_SMALL.z_dim).astype(np.float32)
+    imgs = eng8.generate(z)
+    ref = np.asarray(generator_apply(p, MNIST_SMALL, jnp.asarray(z),
+                                     backend="reverse_loop"))
+    np.testing.assert_allclose(imgs, ref, rtol=2e-3, atol=2e-3)
+    # stats accounting stays exact: 8 - 5 = 3 padded rows, no more
+    assert eng8.stats["padded_images"] == 3
+    assert eng8.stats["images"] == 21
+
+
+def test_shard_aligned_buckets():
+    from repro.serve.engine import shard_aligned_buckets
+
+    assert shard_aligned_buckets((1, 2, 4, 8, 16), 8) == (8, 16)
+    assert shard_aligned_buckets((1, 2, 4, 8, 16), 1) == (1, 2, 4, 8, 16)
+    assert shard_aligned_buckets((4, 6), 4) == (4, 8)
 
 
 def test_oversized_batch_chunks_at_largest_bucket(tmp_cache, rng):
