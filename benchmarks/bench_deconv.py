@@ -246,6 +246,65 @@ def batch_sweep_rows(batches=(8, 64), reps: int = 3):
     return rows
 
 
+def quant_rows(batch: int = 64, mmd_n: int = 16, calib_n: int = 32):
+    """int8 quantization acceptance: modeled speedup + measured quality.
+
+    Per network: the DSE-modeled whole-network throughput of the
+    dtype-aware autotuned tiles at ``batch`` — int8 (1-byte traffic, int8
+    MXU peak) over fp32 (4-byte traffic) — plus the measured MMD between
+    int8-generated and fp32-generated images per calibration strategy
+    (the statistical-clipping comparison of quant.evaluate).  The modeled
+    speedup is the acceptance number: >= 1.5x at batch 64."""
+    from repro.quant.evaluate import mmd_degradation
+
+    rows = []
+    for cfg, n_mmd in ((MNIST_DCNN, mmd_n), (CELEBA_DCNN, max(8, mmd_n // 2))):
+        per_dtype = {}
+        geoms = cfg.geometries()
+        for label, dtype, dbytes in (("fp32", jnp.float32, 4),
+                                     ("int8", jnp.int8, 1)):
+            total_time = 0.0
+            total_ops = 0.0
+            for li, g in enumerate(geoms):
+                # the int8 chain's last layer emits f32 images; price its
+                # output block accordingly (matches network_tiles)
+                ob = 4 if dbytes == 1 and li == len(geoms) - 1 else None
+                c = choose_tiles(g, dtype, backend="pallas", batch=batch,
+                                 out_dtype_bytes=ob)
+                att = tile_attainable(g, c.t_oh, c.t_ow, c.t_ci, c.t_co,
+                                      TPU_V5E, t_n=c.t_n, batch=batch,
+                                      dtype_bytes=dbytes,
+                                      out_dtype_bytes=ob)
+                total_ops += g.ops * batch
+                total_time += g.ops * batch / att.attainable_ops
+            per_dtype[label] = total_ops / total_time
+        params, _ = generator_init(jax.random.PRNGKey(0), cfg)
+        quality = mmd_degradation(params, cfg, jax.random.PRNGKey(1),
+                                  n=n_mmd, calib_n=calib_n)
+        rows.append({
+            "net": cfg.name, "batch": batch,
+            "modeled_fp32_gops": per_dtype["fp32"] / 1e9,
+            "modeled_int8_gops": per_dtype["int8"] / 1e9,
+            "modeled_speedup": per_dtype["int8"] / per_dtype["fp32"],
+            "mmd": quality,
+        })
+    return rows
+
+
+def print_quant(rows):
+    print("# int8 quantization: DSE-modeled network speedup (dtype-aware "
+          "tiles) + measured MMD vs fp32 per calibration strategy")
+    print(f"{'net':13s} {'batch':>5s} {'fp32 GOps/s':>12s} "
+          f"{'int8 GOps/s':>12s} {'speedup':>8s}  mmd-vs-fp32 by strategy")
+    for r in rows:
+        mmds = ", ".join(f"{q['strategy']}={q['mmd_vs_fp32']:.4f}"
+                         for q in r["mmd"])
+        print(f"{r['net']:13s} {r['batch']:5d} "
+              f"{r['modeled_fp32_gops']:12.1f} "
+              f"{r['modeled_int8_gops']:12.1f} "
+              f"{r['modeled_speedup']:7.2f}x  {mmds}")
+
+
 def serving_sweep_rows(reps: int = 3, stream=(3, 5, 1, 8, 2, 6, 4, 7)):
     """Bucketed serving engine on the MNIST generator: a mixed-size request
     stream through `DcnnServeEngine.submit/collect`, reporting end-to-end
@@ -362,13 +421,14 @@ def print_sharded(row):
 
 
 def write_json(path: str, table2, traffic, autotune, scaling,
-               batch_sweep=None, serving=None, sharded=None):
+               batch_sweep=None, serving=None, sharded=None, quant=None):
     with open(path, "w") as f:
         json.dump({"table2": table2, "traffic": traffic,
                    "autotune": autotune, "scaling": scaling,
                    "batch_sweep": batch_sweep or [],
                    "serving": serving or {},
-                   "sharded": sharded or {}},
+                   "sharded": sharded or {},
+                   "quant": quant or []},
                   f, indent=1, default=float)
     print(f"[bench_deconv] wrote {path}")
 
@@ -445,6 +505,7 @@ def main(reps: int = 50, smoke: bool = False,
         b_rows = batch_sweep_rows(batches=(8, 64), reps=3)
         serving = serving_sweep_rows(reps=1)
         sharded = sharded_rows(devices=8, stream=(5, 8))
+        q_rows = quant_rows(batch=64, mmd_n=16, calib_n=32)
         print_traffic(t_rows)
         print()
         print_scaling(s_rows)
@@ -456,8 +517,10 @@ def main(reps: int = 50, smoke: bool = False,
         print_serving(serving)
         print()
         print_sharded(sharded)
+        print()
+        print_quant(q_rows)
         write_json(json_path, [], t_rows, a_rows, s_rows, b_rows, serving,
-                   sharded)
+                   sharded, q_rows)
         return []
     rows = run(reps)
     print("# Table II analogue: GOps/s mean (cv) per layer; cv = run-to-run "
@@ -492,8 +555,11 @@ def main(reps: int = 50, smoke: bool = False,
     print()
     sharded = sharded_rows(devices=8)
     print_sharded(sharded)
+    print()
+    q_rows = quant_rows(batch=64, mmd_n=32, calib_n=64)
+    print_quant(q_rows)
     write_json(json_path, rows, t_rows, a_rows, s_rows, b_rows, serving,
-               sharded)
+               sharded, q_rows)
     return rows
 
 

@@ -33,6 +33,17 @@ class Device:
     # on-chip footprint model: our kernel ("full_spatial") vs the paper's
     # FPGA streaming dataflow ("eq5")
     footprint_model: str = "full_spatial"
+    # int8 MXU rate (ops/s); 0.0 = no dedicated int8 path (fall back to
+    # peak_ops).  This is the compute-roofline side of the paper's
+    # low-precision advantage — quantization also quarters the traffic.
+    int8_peak_ops: float = 0.0
+
+    def peak_for(self, dtype_bytes: Optional[int] = None) -> float:
+        """Compute roofline for a given element width: the int8 datapath
+        doubles the MXU rate where the hardware has one."""
+        if dtype_bytes == 1 and self.int8_peak_ops > 0.0:
+            return self.int8_peak_ops
+        return self.peak_ops
 
     def __str__(self) -> str:  # pragma: no cover
         return self.name
@@ -45,6 +56,7 @@ TPU_V5E = Device(
     bandwidth=819e9,
     onchip_bytes=16 * 1024 * 1024,
     dtype_bytes=2,  # bf16
+    int8_peak_ops=394e12,  # the MXU's doubled int8 rate
 )
 
 # The paper's PYNQ-Z2 point design: 16 CUs @ 125 MHz, 1 MAC/cycle/CU,
@@ -127,6 +139,8 @@ def tile_attainable(
     device: Device = TPU_V5E,
     t_n: int = 1,
     batch: Optional[int] = None,
+    dtype_bytes: Optional[int] = None,
+    out_dtype_bytes: Optional[int] = None,
 ) -> DsePoint:
     """Roofline-attainable throughput for one *full* tile choice.
 
@@ -138,14 +152,22 @@ def tile_attainable(
     tile, so batch tiling amortizes weight traffic AND fills the MXU row
     dimension (``t_n * T_OH/S * T_OW/S`` contraction rows).  The MXU-fill
     factor scales the compute roofline: a tap matmul with fewer than 128
-    rows leaves the systolic array proportionally idle."""
+    rows leaves the systolic array proportionally idle.
+
+    ``dtype_bytes`` makes the model precision-aware: it sets the
+    bytes/element of the streamed traffic AND selects the device's peak
+    for that width (int8 runs the doubled MXU rate), defaulting to the
+    device's native ``dtype_bytes``."""
     batch = t_n if batch is None else batch
+    dtype_bytes = device.dtype_bytes if dtype_bytes is None else dtype_bytes
+    peak = device.peak_for(dtype_bytes)
     traffic = deconv_traffic_batched(geom, batch, t_n, t_oh, t_ow, t_ci,
-                                     t_co, device.dtype_bytes)
+                                     t_co, dtype_bytes,
+                                     out_dtype_bytes=out_dtype_bytes)
     ctc = batch * geom.ops / max(traffic.total_bytes, 1)
     rows = t_n * (t_oh // geom.stride) * (t_ow // geom.stride)
     mxu_fill = min(1.0, rows / 128.0)
-    attainable = min(device.peak_ops * mxu_fill, ctc * device.bandwidth)
+    attainable = min(peak * mxu_fill, ctc * device.bandwidth)
     from .tiling import kernel_vmem_bytes
 
     return DsePoint(
@@ -153,8 +175,9 @@ def tile_attainable(
         ctc=ctc,
         attainable_ops=attainable,
         vmem_bytes=kernel_vmem_bytes(geom, t_oh, t_ow, t_ci, t_co,
-                                     device.dtype_bytes, t_n=t_n),
-        bandwidth_bound=ctc * device.bandwidth < device.peak_ops * mxu_fill,
+                                     dtype_bytes, t_n=t_n,
+                                     out_dtype_bytes=out_dtype_bytes),
+        bandwidth_bound=ctc * device.bandwidth < peak * mxu_fill,
     )
 
 

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from .offsets import PhasePlan, make_phase_plan
 
@@ -120,19 +120,27 @@ def kernel_vmem_bytes(
     t_co: int,
     dtype_bytes: int = 4,
     t_n: int = 1,
+    out_dtype_bytes: Optional[int] = None,
 ) -> int:
     """Precise VMEM footprint of the halo-streaming Pallas kernel.
 
     Input/weight/bias blocks are double-buffered by the Mosaic pipeline
-    (x2); the f32 accumulator scratch and the output block are single.
+    (x2); the 4-byte accumulator scratch (f32 for the dense/sparse
+    kernels, int32 for the int8 kernel) and the output block are single.
     ``t_n`` is the batch tile: each grid program owns ``t_n`` images' halo
-    windows / output blocks (the weight slab is batch-stationary)."""
+    windows / output blocks (the weight slab is batch-stationary).
+    ``dtype_bytes`` is the streamed element width (1 for the int8 kernel);
+    ``out_dtype_bytes`` overrides the output block's width when it differs
+    from the inputs' (an int8 layer whose epilogue emits f32)."""
     ht_h = halo_tile(t_oh, geom.kernel, geom.stride, geom.padding)
     ht_w = halo_tile(t_ow, geom.kernel, geom.stride, geom.padding)
+    out_b = dtype_bytes if out_dtype_bytes is None else out_dtype_bytes
     x_bytes = t_n * ht_h.extent * ht_w.extent * t_ci * dtype_bytes
     w_bytes = geom.kernel * geom.kernel * t_ci * t_co * dtype_bytes
-    b_bytes = t_co * dtype_bytes
-    y_bytes = t_n * t_oh * t_ow * t_co * dtype_bytes
+    # epilogue vectors stream as f32: bias for the float kernels, bias AND
+    # the per-channel requant scale for the int8 kernel (two in_specs)
+    b_bytes = (2 if dtype_bytes == 1 else 1) * t_co * max(dtype_bytes, 4)
+    y_bytes = t_n * t_oh * t_ow * t_co * out_b
     acc_bytes = t_n * t_oh * t_ow * t_co * 4
     return 2 * (x_bytes + w_bytes + b_bytes) + y_bytes + acc_bytes
 
@@ -245,6 +253,7 @@ def deconv_traffic_batched(
     t_ci: int,
     t_co: int,
     dtype_bytes: int = 4,
+    out_dtype_bytes: Optional[int] = None,
 ) -> DeconvTraffic:
     """HBM bytes moved for a *batch* under the batch-fused kernel.
 
@@ -252,9 +261,13 @@ def deconv_traffic_batched(
     dimension): each grid program streams ``t_n`` halo windows but only ONE
     weight slab per CI step, so weight traffic per image falls by ``t_n`` —
     the spatio-temporal amortization that makes the batched path win on the
-    fat-channel early layers."""
+    fat-channel early layers.  ``dtype_bytes`` is the streamed element
+    width — 1 on the int8 path, where the quartered stream is half the
+    paper's low-precision advantage — and ``out_dtype_bytes`` overrides
+    the written block's width when the epilogue changes precision."""
     ht_h = halo_tile(t_oh, geom.kernel, geom.stride, geom.padding)
     ht_w = halo_tile(t_ow, geom.kernel, geom.stride, geom.padding)
+    o_bytes = dtype_bytes if out_dtype_bytes is None else out_dtype_bytes
     n_n = -(-batch // t_n)
     n_h = -(-geom.out_h // t_oh)
     n_w = -(-geom.out_w // t_ow)
@@ -262,7 +275,7 @@ def deconv_traffic_batched(
     n_ci = -(-geom.c_in // t_ci)
     in_b = t_n * ht_h.extent * ht_w.extent * t_ci * dtype_bytes
     w_b = geom.kernel * geom.kernel * t_ci * t_co * dtype_bytes
-    out_b = t_n * t_oh * t_ow * t_co * dtype_bytes
+    out_b = t_n * t_oh * t_ow * t_co * o_bytes
     n_tiles = n_n * n_h * n_w * n_co
     total = n_tiles * (n_ci * (in_b + w_b) + out_b)
     return DeconvTraffic(

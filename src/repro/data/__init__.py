@@ -1,2 +1,3 @@
-from .pipeline import StepIndexedSource, Prefetcher, image_source, lm_source
+from .pipeline import (StepIndexedSource, Prefetcher, finite_batches,
+                       image_source, lm_source)
 from .synthetic import digit_images, face_images, token_stream

@@ -51,6 +51,15 @@ def lm_source(seed: int, batch: int, seq_len: int, vocab: int) -> StepIndexedSou
     return StepIndexedSource(fn)
 
 
+def finite_batches(source: StepIndexedSource, n_steps: int,
+                   start: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    """Adapt a step-indexed source into a finite streaming iterator — the
+    `WganTrainer.fit` streaming-source form (one batch per critic
+    sub-step, training stops when the iterator drains)."""
+    for step in range(start, start + n_steps):
+        yield source.batch(step)
+
+
 class Prefetcher:
     """Bounded background prefetch over a StepIndexedSource."""
 

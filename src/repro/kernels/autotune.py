@@ -38,7 +38,12 @@ _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 # stored entry gained a field, so v1 entries (4-tuple tiles, no batch in
 # the key) must never be served.  The version is embedded in every key and
 # `_valid_entry` drops anything that does not carry the full 5-tuple.
-_CACHE_VERSION = 2
+# v3: the ranking model became dtype-aware (the requested dtype's byte
+# width drives the traffic/VMEM models and selects the int8 MXU peak), so
+# a v2 entry — ranked with the device's native width regardless of the
+# request — is stale even though its key already named the dtype.
+# `_load_cache` drops every key from a different schema version.
+_CACHE_VERSION = 3
 _lock = threading.Lock()
 _cache: Optional[Dict[str, dict]] = None
 
@@ -76,17 +81,21 @@ def cache_path() -> pathlib.Path:
 
 
 def cache_key(geom: DeconvGeometry, dtype, backend: str,
-              device: Device = TPU_V5E, batch: int = 1) -> str:
+              device: Device = TPU_V5E, batch: int = 1,
+              out_dtype_bytes: Optional[int] = None) -> str:
     d = np.dtype(dtype).name
     # the platform and the modeled device are part of the key: refine=True
     # timings taken in CPU interpret mode must never be served as
     # authoritative on TPU, and a choice fitted to one device's VMEM
     # budget/roofline must not leak to another's.  The batch joins the key
-    # because t_n is chosen against it (one entry per serving bucket).
+    # because t_n is chosen against it (one entry per serving bucket); the
+    # output width joins it when it differs from the input dtype's (the
+    # last int8 layer writes f32) because the VMEM/traffic ranking does.
     plat = jax.default_backend()
+    ob = "" if out_dtype_bytes is None else f"|o{out_dtype_bytes}"
     return (f"v{_CACHE_VERSION}|{plat}|{device.name}|{backend}|{d}|"
             f"n{batch}|i{geom.in_h}x{geom.in_w}|c{geom.c_in}>{geom.c_out}|"
-            f"k{geom.kernel}s{geom.stride}p{geom.padding}")
+            f"k{geom.kernel}s{geom.stride}p{geom.padding}{ob}")
 
 
 def _valid_entry(v) -> bool:
@@ -108,7 +117,9 @@ def _load_cache() -> Dict[str, dict]:
             raw = {}
         if not isinstance(raw, dict):  # corrupt top-level: recover empty
             raw = {}
-        _cache = {k: v for k, v in raw.items() if _valid_entry(v)}
+        prefix = f"v{_CACHE_VERSION}|"
+        _cache = {k: v for k, v in raw.items()
+                  if k.startswith(prefix) and _valid_entry(v)}
     return _cache
 
 
@@ -167,10 +178,14 @@ def legal_tile_candidates(
     vmem_budget: int = TPU_V5E.onchip_bytes,
     max_spatial: int = 64,
     batch: int = 1,
+    out_dtype_bytes: Optional[int] = None,
 ) -> List[Tuple[int, int, int, int, int]]:
     """All (t_oh, t_ow, t_ci, t_co, t_n) with stride-aligned square spatial
     tiles that fit the on-chip budget (paper Fig. 5 'legal solutions'),
-    jointly enumerated with the batch tile."""
+    jointly enumerated with the batch tile.  ``out_dtype_bytes`` prices a
+    wider output block than the streamed dtype (the last int8 layer's f32
+    epilogue) so near-budget candidates don't pass the filter at a
+    quarter of their real output footprint."""
     s = geom.stride
     oh_cap = _round_up(min(geom.out_h, max_spatial), s)
     spatial = list(range(s, oh_cap + 1, s))
@@ -183,7 +198,8 @@ def legal_tile_candidates(
             for t_co in _channel_tile_options(geom.c_out):
                 for t_n in _batch_tile_options(batch):
                     fp = kernel_vmem_bytes(geom, t, t, t_ci, t_co,
-                                           dtype_bytes, t_n=t_n)
+                                           dtype_bytes, t_n=t_n,
+                                           out_dtype_bytes=out_dtype_bytes)
                     if fp <= vmem_budget:
                         out.append((t, t, t_ci, t_co, t_n))
     return out
@@ -194,13 +210,20 @@ def rank_candidates(
     candidates: List[Tuple[int, int, int, int, int]],
     device: Device = TPU_V5E,
     batch: int = 1,
+    dtype_bytes: Optional[int] = None,
+    out_dtype_bytes: Optional[int] = None,
 ) -> List[TileChoice]:
     """Sort by modeled attainable throughput (desc), tie-breaking toward
-    higher CTC then larger tiles (fewer grid programs)."""
+    higher CTC then larger tiles (fewer grid programs).  ``dtype_bytes``
+    makes the ranking precision-aware: int8 candidates are scored with
+    quarter-width traffic and the device's doubled int8 MXU peak
+    (``out_dtype_bytes`` widening the output block where the epilogue
+    emits f32)."""
     scored = []
     for (t_oh, t_ow, t_ci, t_co, t_n) in candidates:
         pt = tile_attainable(geom, t_oh, t_ow, t_ci, t_co, device,
-                             t_n=t_n, batch=batch)
+                             t_n=t_n, batch=batch, dtype_bytes=dtype_bytes,
+                             out_dtype_bytes=out_dtype_bytes)
         scored.append(TileChoice(
             t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co, t_n=t_n,
             source="model",
@@ -219,6 +242,7 @@ def fallback_tiles(
     dtype_bytes: int = 4,
     vmem_budget: int = TPU_V5E.onchip_bytes,
     batch: int = 1,
+    out_dtype_bytes: Optional[int] = None,
 ) -> TileChoice:
     """The old fixed heuristic (~32x32 spatial, 128-channel tiles), now
     clamped through `kernel_vmem_bytes` so large CI x CO layers can no
@@ -236,7 +260,8 @@ def fallback_tiles(
     def fits(tn=None) -> bool:
         return kernel_vmem_bytes(
             geom, t_oh, t_ow, t_ci, t_co, dtype_bytes,
-            t_n=(t_n if tn is None else tn)) <= vmem_budget
+            t_n=(t_n if tn is None else tn),
+            out_dtype_bytes=out_dtype_bytes) <= vmem_budget
 
     while not fits():
         if t_ci > 8:
@@ -256,7 +281,8 @@ def fallback_tiles(
         t_oh=t_oh, t_ow=t_ow, t_ci=t_ci, t_co=t_co, t_n=t_n,
         source="fallback",
         vmem_bytes=kernel_vmem_bytes(geom, t_oh, t_ow, t_ci, t_co,
-                                     dtype_bytes, t_n=t_n),
+                                     dtype_bytes, t_n=t_n,
+                                     out_dtype_bytes=out_dtype_bytes),
     )
 
 
@@ -277,18 +303,28 @@ def network_tiles(
     serving bucket on one device, or the *per-device sub-batch* when the
     caller shards the bucket across a mesh (the DSE then picks ``t_n``
     against the shard, not the global batch).  Returns None for backends
-    without tile factors."""
+    without tile factors.  For integer dtypes the *last* layer is tuned
+    with a 4-byte output block: the int8 chain's final epilogue emits f32
+    images while every intermediate layer re-quantizes to int8."""
     if backend not in ("pallas", "pallas_sparse"):
         return None
     if dtype is None:
         dtype = cfg.jdtype
+    geoms = list(cfg.geometries())
+    int8_chain = np.dtype(dtype).kind in ("i", "u")
+
+    def out_bytes(i: int) -> Optional[int]:
+        return 4 if int8_chain and i == len(geoms) - 1 else None
+
     if autotune:
         return {i: choose_tiles(g, dtype, backend=backend, refine=refine,
-                                device=device, batch=batch)
-                for i, g in enumerate(cfg.geometries())}
+                                device=device, batch=batch,
+                                out_dtype_bytes=out_bytes(i))
+                for i, g in enumerate(geoms)}
     itemsize = np.dtype(dtype).itemsize
-    return {i: fallback_tiles(g, itemsize, device.onchip_bytes, batch=batch)
-            for i, g in enumerate(cfg.geometries())}
+    return {i: fallback_tiles(g, itemsize, device.onchip_bytes, batch=batch,
+                              out_dtype_bytes=out_bytes(i))
+            for i, g in enumerate(geoms)}
 
 
 # ---------------------------------------------------------------------------
@@ -343,6 +379,7 @@ def choose_tiles(
     device: Device = TPU_V5E,
     use_cache: bool = True,
     batch: int = 1,
+    out_dtype_bytes: Optional[int] = None,
 ) -> TileChoice:
     """Resolve the tile assignment for one deconv layer.
 
@@ -351,9 +388,17 @@ def choose_tiles(
     tiles, trading MXU row fill + weight amortization against VMEM.
     ``refine=True`` times the top-`refine_top_k` model-ranked candidates on
     the current backend and keeps the fastest (then persists it, so the
-    timing cost is paid once per (geometry, dtype, backend, batch))."""
+    timing cost is paid once per (geometry, dtype, backend, batch)).
+    ``out_dtype_bytes`` widens the modeled output block when the kernel's
+    epilogue emits a wider dtype than it streams (the last int8 layer
+    writes f32 images)."""
     dtype_bytes = np.dtype(dtype).itemsize
-    key = cache_key(geom, dtype, backend, device, batch)
+    if refine and np.dtype(dtype).kind != "f":
+        # the timing harness drives the float kernels with random normal
+        # inputs; integer (int8) requests keep the model ranking — the
+        # dtype-aware roofline is what differentiates them anyway
+        refine = False
+    key = cache_key(geom, dtype, backend, device, batch, out_dtype_bytes)
     if use_cache:
         hit = _load_cache().get(key)
         # a refine=True request is only satisfied by a *timed* entry; a
@@ -366,12 +411,16 @@ def choose_tiles(
                 source="cache")
 
     cands = legal_tile_candidates(geom, dtype_bytes, device.onchip_bytes,
-                                  batch=batch)
+                                  batch=batch,
+                                  out_dtype_bytes=out_dtype_bytes)
     if not cands:
         choice = fallback_tiles(geom, dtype_bytes, device.onchip_bytes,
-                                batch=batch)
+                                batch=batch,
+                                out_dtype_bytes=out_dtype_bytes)
     else:
-        ranked = rank_candidates(geom, cands, device, batch=batch)
+        ranked = rank_candidates(geom, cands, device, batch=batch,
+                                 dtype_bytes=dtype_bytes,
+                                 out_dtype_bytes=out_dtype_bytes)
         choice = ranked[0]
         if refine:
             timed = []

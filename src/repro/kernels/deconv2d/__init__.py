@@ -1,4 +1,5 @@
+from .int8 import deconv2d_int8
 from .ops import deconv2d
-from .ref import deconv2d_ref
+from .ref import deconv2d_int8_ref, deconv2d_ref
 
-__all__ = ["deconv2d", "deconv2d_ref"]
+__all__ = ["deconv2d", "deconv2d_int8", "deconv2d_int8_ref", "deconv2d_ref"]

@@ -26,6 +26,35 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
+def halo_pad_geometry(n: int, ih: int, iw: int, ci: int, co: int,
+                      plan, t_oh: int, t_ow: int, t_ci: int, t_co: int,
+                      t_n: int):
+    """Host-side padded geometry shared by the f32 and int8 jit wrappers.
+
+    Returns ``(oh, ow, ohp, owp, pad_l, pad_rh, pad_rw, cip, cop, t_n,
+    np_)``: the true output extents, the tile-multiple output grid, the
+    halo padding that keeps every per-tile window in bounds (enhancement
+    3: all address arithmetic resolved ahead of the kernel), the channel
+    tiles' padded extents, the batch tile clamped to the batch, and the
+    t_n-multiple padded batch.  One implementation, two kernels — the
+    padded geometry (and the final un-padding slice) can never drift
+    between the precisions."""
+    oh = out_size(ih, plan.kernel_size, plan.stride, plan.padding)
+    ow = out_size(iw, plan.kernel_size, plan.stride, plan.padding)
+    ohp = _round_up(oh, t_oh)
+    owp = _round_up(ow, t_ow)
+    n_h_pad = ohp // plan.stride
+    n_w_pad = owp // plan.stride
+    pad_l = plan.left_halo
+    pad_rh = max(0, (n_h_pad - 1 + plan.delta_max) - (ih - 1))
+    pad_rw = max(0, (n_w_pad - 1 + plan.delta_max) - (iw - 1))
+    cip = _round_up(ci, t_ci)
+    cop = _round_up(co, t_co)
+    t_n = min(t_n, n) if n > 0 else 1
+    np_ = _round_up(n, t_n)
+    return oh, ow, ohp, owp, pad_l, pad_rh, pad_rw, cip, cop, t_n, np_
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -49,26 +78,14 @@ def _deconv2d_jit(
 ) -> jax.Array:
     n, ih, iw, ci = x.shape
     k, _, _, co = w.shape
-    s = stride
-    oh = out_size(ih, k, s, padding)
-    ow = out_size(iw, k, s, padding)
-    plan = make_phase_plan(k, s, padding)
+    plan = make_phase_plan(k, stride, padding)
 
-    # pad output grid to tile multiples; phase grid rows per padded output
-    ohp = _round_up(oh, t_oh)
-    owp = _round_up(ow, t_ow)
-    n_h_pad = ohp // s
-    n_w_pad = owp // s
-
-    # halo padding (enhancement 3: all address arithmetic resolved up front;
-    # the per-tile windows the kernel streams stay in bounds by construction)
-    pad_l = plan.left_halo
-    pad_rh = max(0, (n_h_pad - 1 + plan.delta_max) - (ih - 1))
-    pad_rw = max(0, (n_w_pad - 1 + plan.delta_max) - (iw - 1))
-    cip = _round_up(ci, t_ci)
-    cop = _round_up(co, t_co)
-    t_n = min(t_n, n) if n > 0 else 1
-    np_ = _round_up(n, t_n)
+    # padded output grid + halo padding (enhancement 3: all address
+    # arithmetic resolved up front; the per-tile windows the kernel
+    # streams stay in bounds by construction)
+    (oh, ow, ohp, owp, pad_l, pad_rh, pad_rw, cip, cop, t_n,
+     np_) = halo_pad_geometry(n, ih, iw, ci, co, plan, t_oh, t_ow, t_ci,
+                              t_co, t_n)
     xp = jnp.pad(
         x, ((0, np_ - n), (pad_l, pad_rh), (pad_l, pad_rw), (0, cip - ci))
     )
@@ -99,6 +116,7 @@ def resolve_tiles(
     t_n: Optional[int] = None,
     backend: str = "pallas",
     autotune: bool = True,
+    out_dtype_bytes: Optional[int] = None,
 ):
     """Fill unspecified tile factors (shared by dense and sparse wrappers).
 
@@ -115,11 +133,13 @@ def resolve_tiles(
     if autotune:
         from ..autotune import choose_tiles
 
-        c = choose_tiles(geom, x.dtype, backend=backend, batch=n)
+        c = choose_tiles(geom, x.dtype, backend=backend, batch=n,
+                         out_dtype_bytes=out_dtype_bytes)
     else:
         from ..autotune import fallback_tiles
 
-        c = fallback_tiles(geom, jnp.dtype(x.dtype).itemsize, batch=n)
+        c = fallback_tiles(geom, jnp.dtype(x.dtype).itemsize, batch=n,
+                           out_dtype_bytes=out_dtype_bytes)
     return (t_oh or c.t_oh, t_ow or c.t_ow, t_ci or c.t_ci, t_co or c.t_co,
             t_n or c.t_n)
 

@@ -1,13 +1,18 @@
-"""Pure-jnp oracle for the deconv2d Pallas kernel.
+"""Pure-jnp oracles for the deconv2d Pallas kernels.
 
-The oracle is the conventional zero-insertion transposed convolution lowered
-through XLA's conv (`core.deconv.deconv2d_zero_insertion`) — an implementation
-entirely independent of the reverse-loop/phase machinery under test."""
+The f32 oracle is the conventional zero-insertion transposed convolution
+lowered through XLA's conv (`core.deconv.deconv2d_zero_insertion`) — an
+implementation entirely independent of the reverse-loop/phase machinery
+under test.  The int8 oracle runs the same zero-insertion formulation as
+an *integer-exact* int32 convolution, then applies the identical requant
+epilogue, so kernel-vs-reference parity has no float-reassociation slack
+in the reduction."""
 from __future__ import annotations
 
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from ...core.deconv import deconv2d_zero_insertion
 
@@ -21,3 +26,39 @@ def deconv2d_ref(
 ) -> jax.Array:
     """x: (N, IH, IW, CI); w: (K, K, CI, CO); y: (N, OH, OW, CO)."""
     return deconv2d_zero_insertion(x, w, b, stride, padding)
+
+
+def deconv2d_int8_ref(
+    x_q: jax.Array,          # (N, IH, IW, CI) int8
+    w_q: jax.Array,          # (K, K, CI, CO)  int8
+    scale: jax.Array,        # (CO,) f32 combined s_x * s_w
+    b: Optional[jax.Array],  # (CO,) f32
+    stride: int,
+    padding: int,
+    activation: Optional[str] = None,
+    out_scale: Optional[float] = None,
+) -> jax.Array:
+    """int32-exact fake-quant oracle for `deconv2d_int8`.
+
+    The integer accumulator is exact (no rounding before requant), so the
+    Pallas kernel — which also accumulates in int32 — must match the
+    epilogue output to float ulp, not just approximately."""
+    from .int8 import requant_epilogue
+
+    k = w_q.shape[0]
+    wf = jnp.flip(w_q, axis=(0, 1))
+    pad = k - 1 - padding
+    acc = jax.lax.conv_general_dilated(
+        x_q,
+        wf,
+        window_strides=(1, 1),
+        padding=((pad, pad), (pad, pad)),
+        lhs_dilation=(stride, stride),
+        rhs_dilation=(1, 1),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+    bias = (b.astype(jnp.float32) if b is not None
+            else jnp.zeros((w_q.shape[3],), jnp.float32))
+    return requant_epilogue(acc, scale.astype(jnp.float32), bias,
+                            activation, out_scale)

@@ -116,7 +116,8 @@ def generator_apply(
     p, cfg: DcnnConfig, z: jax.Array, backend: str = "reverse_loop",
     tile_overrides: Optional[Dict[int, Any]] = None,
     sparse_plans: Optional[Dict[int, Any]] = None,
-) -> jax.Array:
+    return_intermediates: bool = False,
+):
     """z: (B, z_dim) -> images (B, H, W, C) in [-1, 1].
 
     On the pallas backends each layer's bias + activation run fused in the
@@ -124,10 +125,16 @@ def generator_apply(
     layer in HBM; the other backends apply the activation separately.
     ``sparse_plans`` maps layer index -> precomputed `make_sparse_plan`
     result for backend="pallas_sparse" (see serve.DcnnServeEngine).
+    ``return_intermediates=True`` additionally returns the list of
+    per-layer *inputs* (the tensors quantization calibrates against —
+    see quant.calibrate): ``(images, [x_0, ..., x_{L-1}])``.
     """
     x = z.reshape(z.shape[0], 1, 1, cfg.z_dim).astype(cfg.jdtype)
     x = constrain(x, "batch", None, None, None)
+    inters = []
     for i, l in enumerate(cfg.layers):
+        if return_intermediates:
+            inters.append(x)
         w, b = p[f"l{i}"]["w"], p[f"l{i}"]["b"]
         tiles = _tile_kwargs((tile_overrides or {}).get(i))
         fused = backend in ("pallas", "pallas_sparse")
@@ -149,6 +156,8 @@ def generator_apply(
         if not fused:
             x = jnp.tanh(x) if l.activation == "tanh" else jax.nn.relu(x)
         x = constrain(x, "batch", None, None, None)
+    if return_intermediates:
+        return x, inters
     return x
 
 

@@ -4,6 +4,10 @@ int8 stochastic-free symmetric quantization with per-leaf scales plus error
 feedback (residual carried to the next step), applied *before* the DP
 all-reduce so inter-pod ICI traffic drops ~4x (bf16->int8 with f32 scales).
 Error feedback keeps convergence (Karimireddy et al. style).
+
+The scale/round/clip arithmetic is `quant.qmath` — the same symmetric
+int8 math the inference quantization path uses (one quantization math
+module, two call sites).
 """
 from __future__ import annotations
 
@@ -11,6 +15,8 @@ from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from ..quant.qmath import dequantize_symmetric, quantize_absmax
 
 
 class EFState(NamedTuple):
@@ -23,13 +29,11 @@ def init_error_feedback(grads_like) -> EFState:
 
 
 def quantize_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    return quantize_absmax(g)
 
 
 def dequantize_leaf(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+    return dequantize_symmetric(q, scale)
 
 
 def compress_grads(grads, ef: EFState) -> Tuple[Any, Any, EFState]:

@@ -1,0 +1,26 @@
+"""Post-training int8 quantization for the deconv inference stack.
+
+The paper's FPGA accelerator picks its fixed-point bit-widths by
+*statistical analysis* of the weight/activation distributions; this
+package is the TPU analogue: activation observers calibrate per-layer
+ranges (`calibrate`), weights quantize per output channel
+(`quantize_params`), and the int8 batch-fused Pallas kernel
+(`kernels.deconv2d.deconv2d_int8`) runs the whole generator with int32
+accumulation and a fused requant + bias + activation epilogue.
+
+One quantization math module (`qmath`) serves two call sites: this
+inference path and the gradient-compression path in `optim.compression`.
+"""
+from .calibrate import (OBSERVERS, LayerQuant, QuantConfig, calibrate,
+                        observe_amax, quantize_params)
+from .evaluate import mmd_degradation
+from .infer import quantized_generator_apply, quantized_generator_ref
+from .qmath import (QMAX, dequantize_symmetric, fake_quant, quantize_absmax,
+                    quantize_symmetric, symmetric_scale)
+
+__all__ = [
+    "OBSERVERS", "LayerQuant", "QuantConfig", "calibrate", "observe_amax",
+    "quantize_params", "mmd_degradation", "quantized_generator_apply",
+    "quantized_generator_ref", "QMAX", "dequantize_symmetric", "fake_quant",
+    "quantize_absmax", "quantize_symmetric", "symmetric_scale",
+]

@@ -1,0 +1,124 @@
+"""Statistical calibration of per-layer, per-channel int8 ranges.
+
+The paper sizes its fixed-point datapaths by statistical analysis of the
+weight/activation distributions rather than worst-case ranges; the same
+methodology drives this module's *activation observers*:
+
+* ``minmax``      — clip at max|x| (lossless range, widest steps);
+* ``percentile``  — clip at the p-th percentile of |x| (drops the long
+                    activation tail that would otherwise inflate the step);
+* ``mean_ksigma`` — clip at mean(|x|) + k * std(|x|), the mean +- k-sigma
+                    statistical clipping the paper's methodology describes.
+
+``calibrate`` pushes a calibration batch through ``generator_apply``
+(reverse-loop backend: pure JAX, no kernels involved) and observes the
+*input* of every deconv layer — that is the tensor the int8 kernel
+quantizes.  Weights are quantized per output channel (amax over the
+(K, K, C_in) slab of each C_out), the granularity Zhang et al. and
+Alhussain both show deconv inference needs to survive int8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from ..models.dcnn import DcnnConfig, generator_apply
+from .qmath import QMAX, quantize_symmetric, symmetric_scale
+
+OBSERVERS = ("minmax", "percentile", "mean_ksigma")
+
+
+def observe_amax(x, strategy: str = "mean_ksigma", percentile: float = 99.9,
+                 k: float = 6.0) -> float:
+    """Clip value (pre-scale absolute max) for one activation tensor."""
+    a = np.abs(np.asarray(x, np.float32)).ravel()
+    if strategy == "minmax":
+        return float(a.max())
+    if strategy == "percentile":
+        return float(np.percentile(a, percentile))
+    if strategy == "mean_ksigma":
+        return float(min(a.max(), a.mean() + k * a.std()))
+    raise ValueError(
+        f"unknown observer {strategy!r}; expected one of {OBSERVERS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerQuant:
+    """Calibrated ranges for one deconv layer.
+
+    ``x_scale`` is the per-tensor scale of the layer's *input* activation;
+    ``w_scale`` is the per-output-channel weight scale tuple (length
+    C_out).  Stored as plain floats so the config is hashable/serializable
+    and bakes into compiled executables as constants."""
+
+    x_scale: float
+    w_scale: Tuple[float, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Per-layer calibration result for a whole generator network."""
+
+    name: str
+    strategy: str
+    layers: Tuple[LayerQuant, ...]
+
+    def out_scale(self, i: int):
+        """Requant scale of layer i's output == layer i+1's input scale
+        (None for the last layer, which stays f32 after its epilogue)."""
+        return (self.layers[i + 1].x_scale
+                if i + 1 < len(self.layers) else None)
+
+
+def calibrate(params, cfg: DcnnConfig, z: jax.Array,
+              strategy: str = "mean_ksigma", percentile: float = 99.9,
+              k: float = 6.0) -> QuantConfig:
+    """Observe a calibration batch and emit the per-layer QuantConfig.
+
+    ``z``: (B, z_dim) calibration latents (the serving input distribution).
+    The observed tensors are each layer's input — z itself for layer 0,
+    then every post-activation intermediate of the fp32 reference chain.
+    """
+    if strategy not in OBSERVERS:
+        raise ValueError(
+            f"unknown observer {strategy!r}; expected one of {OBSERVERS}")
+    _, inters = generator_apply(params, cfg, z, backend="reverse_loop",
+                                return_intermediates=True)
+    assert len(inters) == len(cfg.layers)
+    layers = []
+    for i, x_in in enumerate(inters):
+        amax = observe_amax(x_in, strategy, percentile=percentile, k=k)
+        w = np.asarray(params[f"l{i}"]["w"], np.float32)
+        w_amax = np.abs(w).reshape(-1, w.shape[3]).max(axis=0)
+        layers.append(LayerQuant(
+            x_scale=float(symmetric_scale(amax)),
+            w_scale=tuple(float(symmetric_scale(a)) for a in w_amax),
+        ))
+    return QuantConfig(name=cfg.name, strategy=strategy,
+                       layers=tuple(layers))
+
+
+def quantize_params(params, cfg: DcnnConfig, qcfg: QuantConfig
+                    ) -> Dict[str, Any]:
+    """int8 weight tree for the quantized serving path.
+
+    Per layer: ``w_q`` (K, K, C_in, C_out) int8 quantized per output
+    channel, ``b`` the untouched f32 bias, and ``scale`` the *combined*
+    requant factor x_scale * w_scale per channel — the one multiply the
+    kernel's epilogue applies to the int32 accumulator."""
+    qp: Dict[str, Any] = {}
+    for i in range(len(cfg.layers)):
+        w = np.asarray(params[f"l{i}"]["w"], np.float32)
+        lq = qcfg.layers[i]
+        w_scale = np.asarray(lq.w_scale, np.float32)
+        w_q = np.asarray(
+            quantize_symmetric(w, w_scale[None, None, None, :], QMAX))
+        qp[f"l{i}"] = {
+            "w_q": w_q,
+            "b": np.asarray(params[f"l{i}"]["b"], np.float32),
+            "scale": (lq.x_scale * w_scale).astype(np.float32),
+        }
+    return qp

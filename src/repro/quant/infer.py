@@ -1,0 +1,81 @@
+"""int8 inference path for the DCNN generators.
+
+`quantized_generator_apply` is the quantized twin of
+`models.dcnn.generator_apply(backend="pallas")`: the calibrated input
+scale quantizes z once, then every deconv layer runs the int8 batch-fused
+Pallas kernel with its fused requant epilogue re-quantizing straight into
+the next layer's calibrated range — the activation chain stays int8 in
+HBM end-to-end, with only the final tanh layer emitting f32 images.
+
+Jit/shard_map friendly: the quantized params ride as ordinary traced
+arrays (the serving engine replicates them on a mesh exactly like f32
+params) while the per-layer scales bake in as compile-time constants of
+the per-bucket executable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.context import constrain
+from ..models.dcnn import DcnnConfig, _tile_kwargs
+from .calibrate import QuantConfig
+from .qmath import quantize_symmetric
+
+
+def quantized_generator_apply(
+    qp: Dict[str, Any],
+    cfg: DcnnConfig,
+    qcfg: QuantConfig,
+    z: jax.Array,
+    tile_overrides: Optional[Dict[int, Any]] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """z: (B, z_dim) f32 -> images (B, H, W, C) f32 in [-1, 1].
+
+    ``qp`` is the `quant.calibrate.quantize_params` tree (int8 ``w_q``,
+    f32 ``b``, f32 per-channel combined ``scale``); ``qcfg`` carries the
+    calibrated activation scales that chain the layers together."""
+    from ..kernels.deconv2d import deconv2d_int8
+
+    if len(qcfg.layers) != len(cfg.layers):
+        raise ValueError(
+            f"QuantConfig has {len(qcfg.layers)} layers; "
+            f"{cfg.name} has {len(cfg.layers)}")
+    x = z.reshape(z.shape[0], 1, 1, cfg.z_dim).astype(jnp.float32)
+    x = quantize_symmetric(x, qcfg.layers[0].x_scale)
+    x = constrain(x, "batch", None, None, None)
+    for i, l in enumerate(cfg.layers):
+        lq = qp[f"l{i}"]
+        tiles = _tile_kwargs((tile_overrides or {}).get(i))
+        x = deconv2d_int8(
+            x, lq["w_q"], lq["scale"], lq["b"], l.stride, l.padding,
+            activation=l.activation, out_scale=qcfg.out_scale(i),
+            interpret=interpret, **tiles)
+        x = constrain(x, "batch", None, None, None)
+    return x
+
+
+def quantized_generator_ref(
+    qp: Dict[str, Any],
+    cfg: DcnnConfig,
+    qcfg: QuantConfig,
+    z: jax.Array,
+) -> jax.Array:
+    """Fake-quant oracle of the whole chain: the same quantize -> int32
+    conv -> requant per layer through `deconv2d_int8_ref` (integer-exact
+    accumulation, identical epilogue) — what the Pallas chain is
+    parity-tested against end to end."""
+    from ..kernels.deconv2d import deconv2d_int8_ref
+
+    x = z.reshape(z.shape[0], 1, 1, cfg.z_dim).astype(jnp.float32)
+    x = quantize_symmetric(x, qcfg.layers[0].x_scale)
+    for i, l in enumerate(cfg.layers):
+        lq = qp[f"l{i}"]
+        x = deconv2d_int8_ref(
+            x, jnp.asarray(lq["w_q"]), jnp.asarray(lq["scale"]),
+            jnp.asarray(lq["b"]), l.stride, l.padding,
+            activation=l.activation, out_scale=qcfg.out_scale(i))
+    return x

@@ -1,0 +1,54 @@
+"""Shared symmetric int8 quantization math.
+
+The single source of the scale/round/clip arithmetic used by BOTH
+quantization call sites in the tree:
+
+* post-training inference quantization (`quant.calibrate` /
+  `kernels.deconv2d.deconv2d_int8`), and
+* gradient compression for the DP all-reduce (`optim.compression`).
+
+Symmetric, zero-point-free: q = clip(round(x / s), -127, 127), x' = q * s.
+Zero maps to zero exactly, which is what lets the deconv kernels zero-pad
+quantized tensors (halo rows, ragged tiles) without a zero-point offset.
+Works on jax arrays inside jit and on numpy arrays on the host.
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127          # int8 symmetric range [-127, 127] (-128 unused)
+_EPS = 1e-12        # keeps all-zero tensors from dividing by zero
+
+Scalar = Union[float, jax.Array]
+
+
+def symmetric_scale(amax: Scalar, qmax: int = QMAX) -> Scalar:
+    """Scale mapping the clip value ``amax`` onto the integer range."""
+    return amax / qmax + _EPS
+
+
+def quantize_symmetric(x: jax.Array, scale: Scalar,
+                       qmax: int = QMAX) -> jax.Array:
+    """round-to-nearest symmetric quantization, saturating at +-qmax."""
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+
+
+def dequantize_symmetric(q: jax.Array, scale: Scalar) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jax.Array, scale: Scalar, qmax: int = QMAX) -> jax.Array:
+    """Quantize-dequantize in f32 — the reference the int8 kernel is
+    parity-tested against (same rounding, same saturation)."""
+    return dequantize_symmetric(quantize_symmetric(x, scale, qmax), scale)
+
+
+def quantize_absmax(x: jax.Array, qmax: int = QMAX
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-shot min/max (absmax) quantization of a whole tensor; returns
+    (q, scale).  This is the gradient-compression entry point."""
+    scale = symmetric_scale(jnp.max(jnp.abs(x)), qmax)
+    return quantize_symmetric(x, scale, qmax), scale

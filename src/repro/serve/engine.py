@@ -227,6 +227,15 @@ class DcnnServeEngine:
       against the *per-device* sub-batch geometry.  ``stats`` /
       ``throughput()`` then report per-device rates.
 
+    * **Quantized serving** — ``precision="int8"`` quantizes the params
+      once at construction (self-calibrating on the z ~ N(0,1) serving
+      distribution unless a pre-computed ``quant_cfg`` is given) and
+      serves every bucket through the int8 batch-fused kernel chain:
+      int32 accumulation, fused requant epilogue, activations int8 in
+      HBM between layers.  Tiles are autotuned at the int8 dtype (v3
+      cache), and the mesh path replicates the quantized tree exactly
+      like fp32 params.
+
     ``trace_counts`` maps bucket -> number of times its generator was
     traced (== compiled); tests pin the no-per-request-recompilation
     guarantee on it."""
@@ -236,12 +245,36 @@ class DcnnServeEngine:
                  max_batch: int = 64,
                  buckets: Optional[Sequence[int]] = None,
                  warmup: bool = False, donate: bool = True,
-                 mesh=None, rules=None, call_overhead_rows: int = 8):
+                 mesh=None, rules=None, call_overhead_rows: int = 8,
+                 precision: str = "fp32", quant_cfg=None,
+                 calib_batch: int = 64, calib_seed: int = 0,
+                 calib_strategy: str = "mean_ksigma"):
         self.cfg = cfg
         self.backend = backend
         # chunk-planning knob: one kernel dispatch is costed like computing
         # this many extra rows (trades padded-row waste against call count)
         self.call_overhead_rows = call_overhead_rows
+        if precision not in ("fp32", "int8"):
+            raise ValueError(f"unknown precision {precision!r}; "
+                             "expected 'fp32' or 'int8'")
+        if precision == "int8" and backend != "pallas":
+            raise ValueError(
+                "precision='int8' runs the dense int8 Pallas kernel; "
+                f"backend={backend!r} has no quantized variant")
+        self.precision = precision
+        self.quant_cfg = quant_cfg
+        if precision == "int8":
+            from ..quant.calibrate import calibrate, quantize_params
+            if self.quant_cfg is None:
+                # self-calibrate on the serving input distribution
+                # (z ~ N(0, 1)): a fixed-seed batch through the fp32
+                # reference chain, observed by the chosen strategy
+                z_cal = jax.random.normal(
+                    jax.random.PRNGKey(calib_seed),
+                    (calib_batch, cfg.z_dim), jnp.float32)
+                self.quant_cfg = calibrate(params, cfg, z_cal,
+                                           strategy=calib_strategy)
+            params = quantize_params(params, cfg, self.quant_cfg)
         self.mesh = mesh
         if mesh is not None:
             from ..dist.sharding import (data_axis_size, make_rules,
@@ -294,7 +327,11 @@ class DcnnServeEngine:
     def _tiles_for(self, bucket: int) -> Optional[dict]:
         from ..kernels.autotune import network_tiles
 
-        return network_tiles(self.cfg, self.cfg.jdtype, backend=self.backend,
+        # the autotuner ranks against the precision actually served: int8
+        # quarters the modeled traffic and doubles the modeled MXU peak,
+        # and the dtype is part of the (v3) cache key
+        dtype = jnp.int8 if self.precision == "int8" else self.cfg.jdtype
+        return network_tiles(self.cfg, dtype, backend=self.backend,
                              batch=self.shard_batch(bucket),
                              refine=self._refine, autotune=self._autotune)
 
@@ -321,10 +358,18 @@ class DcnnServeEngine:
             plans = self._sparse_plans_for(tiles) if tiles else None
             self.tile_choices[bucket] = tiles
 
-            def apply(p, z, _tiles=tiles, _plans=plans):
-                return generator_apply(p, self.cfg, z, backend=self.backend,
-                                       tile_overrides=_tiles,
-                                       sparse_plans=_plans)
+            if self.precision == "int8":
+                from ..quant.infer import quantized_generator_apply
+
+                def apply(p, z, _tiles=tiles):
+                    return quantized_generator_apply(
+                        p, self.cfg, self.quant_cfg, z, tile_overrides=_tiles)
+            else:
+                def apply(p, z, _tiles=tiles, _plans=plans):
+                    return generator_apply(p, self.cfg, z,
+                                           backend=self.backend,
+                                           tile_overrides=_tiles,
+                                           sparse_plans=_plans)
 
             if self.mesh is not None:
                 # SPMD: every device runs the same per-shard executable on
@@ -442,10 +487,16 @@ class DcnnServeEngine:
                 # steady-state call: a call that traced (compiled) would
                 # poison the learned rates by orders of magnitude
                 bs = self.bucket_stats.setdefault(
-                    bucket, {"calls": 0, "images": 0, "seconds": 0.0})
+                    bucket, {"calls": 0, "images": 0, "seconds": 0.0,
+                             "sumsq_seconds": 0.0})
                 bs["calls"] += 1
                 bs["images"] += take
+                # running first/second moments of the per-call wall clock
+                # (the paper's Table II mean/std methodology) — O(1)
+                # state, not a per-call sample list a long-lived engine
+                # would grow without bound
                 bs["seconds"] += dt
+                bs["sumsq_seconds"] += dt * dt
             outs.append(y[:take])
             i += take
         # the accounting is exact by construction; pin it against the plan
@@ -459,16 +510,25 @@ class DcnnServeEngine:
     def throughput(self) -> Dict[int, Dict[str, float]]:
         """Learned per-bucket *steady-state* serving rates (compiling
         calls are excluded from the timers): useful images/s overall and
-        per device (the mesh analogue of the paper's per-PE utilization)."""
+        per device (the mesh analogue of the paper's per-PE utilization),
+        plus run-to-run variation — mean, std and CV (std/mean) of the
+        per-call wall clock over repeated calls, the paper's Table II
+        methodology already used by `benchmarks.common.time_fn`."""
         out = {}
         for bucket, bs in self.bucket_stats.items():
             if bs["seconds"] <= 0.0:
                 continue
             rate = bs["images"] / bs["seconds"]
+            mean_s = bs["seconds"] / bs["calls"]
+            var = max(0.0, bs["sumsq_seconds"] / bs["calls"] - mean_s ** 2)
+            std_s = var ** 0.5
             out[bucket] = {
                 "img_per_s": rate,
                 "img_per_s_per_device": rate / self.n_devices,
                 "calls": bs["calls"],
+                "mean_s": mean_s,
+                "std_s": std_s,
+                "cv": std_s / max(mean_s, 1e-12),
             }
         return out
 

@@ -325,11 +325,22 @@ class WganTrainer:
     def fit(self, source, steps: int, key, log_every: int = 50,
             ckpt=None, ckpt_every: int = 200,
             resume_from: Optional[str] = None):
-        """Train for ``steps`` steps.  Checkpoints carry generator, critic
-        AND both optimizer states plus the step (so a resumed run is
-        bitwise the run that never stopped); per-step keys are
-        ``fold_in(key, step)``-derived, which is what makes the resumed
-        trajectory identical to the uninterrupted one."""
+        """Train for (up to) ``steps`` steps.
+
+        ``source`` is either a step-indexed source (anything exposing
+        ``batch(step) -> {"images": ...}``, pure in the step — the
+        resumable default) or a *streaming batch iterator*: any iterable
+        of ``{"images": ...}`` dicts (or bare image arrays).  A streaming
+        source is consumed one batch per critic sub-step and training
+        stops when it is exhausted — a finite iterator drains exactly,
+        with no synthetic batches invented past its end.  Only a
+        step-indexed source can replay batches on resume; a resumed
+        streaming run continues from wherever its iterator now starts.
+
+        Checkpoints carry generator, critic AND both optimizer states plus
+        the step (so a resumed run is bitwise the run that never stopped);
+        per-step keys are ``fold_in(key, step)``-derived, which is what
+        makes the resumed trajectory identical to the uninterrupted one."""
         kinit, key = jax.random.split(key)
         gp, dp, g_state, d_state = self.init_state(kinit)
         start = 0
@@ -342,6 +353,17 @@ class WganTrainer:
                 g_state, d_state = tree["gs"], tree["ds"]
                 start = int(extra.get("step", step0)) + 1
 
+        stream = None if hasattr(source, "batch") else iter(source)
+
+        def next_real(step):
+            if stream is None:
+                return source.batch(step)["images"]
+            try:
+                rec = next(stream)
+            except StopIteration:
+                return None
+            return rec["images"] if isinstance(rec, dict) else rec
+
         history: List[dict] = []
         for step in range(start, steps):
             skey = jax.random.fold_in(key, step)
@@ -349,7 +371,12 @@ class WganTrainer:
             batch = None
             for j in range(self.n_critic):
                 k = jax.random.fold_in(skey, j)
-                real = source.batch(step)["images"]
+                real = next_real(step)
+                if real is None:
+                    # stream drained mid-step: stop before an unpaired
+                    # generator update (the step's critic/gen balance
+                    # would otherwise silently differ from every other's)
+                    return gp, dp, history
                 batch = real.shape[0]
                 dp, d_state, met_d = self.critic_step(dp, d_state, gp,
                                                       real, k)

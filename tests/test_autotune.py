@@ -175,6 +175,43 @@ def test_stale_v1_schema_entry_not_served(tmp_cache):
                              "t_n": 1}
 
 
+def test_v2_schema_keys_dropped_on_load(tmp_cache):
+    """Satellite: v3 made the ranking dtype-aware, so v2 entries — ranked
+    with the device's native byte width regardless of the requested dtype
+    — are stale even when their value shape is valid.  Every key from a
+    different schema version is dropped on load, and the next store
+    persists a clean v3-only file."""
+    import json
+
+    from repro.kernels.autotune import _CACHE_VERSION, cache_key
+
+    assert _CACHE_VERSION == 3
+    key3 = cache_key(MNIST_L2, jnp.float32, "pallas")
+    assert key3.startswith("v3|")
+    key2 = "v2|" + key3.split("|", 1)[1]
+    entry = {"t_oh": 2, "t_ow": 2, "t_ci": 8, "t_co": 8, "t_n": 1,
+             "source": "timed", "attainable_ops": 1.0, "vmem_bytes": 1}
+    tmp_cache.write_text(json.dumps({key2: entry}))
+    c = choose_tiles(MNIST_L2, jnp.float32, backend="pallas")
+    assert c.source != "cache"
+    assert c.as_kwargs() != {"t_oh": 2, "t_ow": 2, "t_ci": 8, "t_co": 8,
+                             "t_n": 1}
+    blob = json.loads(tmp_cache.read_text())
+    assert key2 not in blob            # stale schema purged on re-store
+    assert key3 in blob
+
+
+def test_int8_dtype_distinct_cache_key(tmp_cache):
+    """The dtype has always been in the key; v3 additionally ranks with
+    it, so int8 and fp32 requests tune (and cache) independently."""
+    c8 = choose_tiles(MNIST_L2, jnp.int8, backend="pallas")
+    assert c8.source != "cache"
+    assert choose_tiles(MNIST_L2, jnp.int8, backend="pallas").source == "cache"
+    assert choose_tiles(MNIST_L2, jnp.float32,
+                        backend="pallas").source != "cache"
+    _assert_legal(MNIST_L2, c8, dtype_bytes=1)
+
+
 def test_corrupt_cache_recovery(tmp_cache):
     """Corrupt JSON (truncated write, hand edit) and malformed entries
     recover to a re-tune instead of crashing or serving garbage."""

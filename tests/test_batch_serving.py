@@ -240,6 +240,33 @@ def test_per_bucket_tiles_resolve_t_n(tmp_cache):
     assert eng.tile_choices[1][0].t_n == 1
 
 
+def test_throughput_reports_run_to_run_cv(tmp_cache, rng):
+    """Satellite: bucket stats carry running per-call wall-clock moments
+    so `throughput()` reports mean/std/CV over repeated calls — the
+    paper's Table II variation methodology (benchmarks.common.time_fn)
+    applied to live serving, in O(1) state per bucket.  Compiling calls
+    stay excluded from the timers."""
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_SMALL)
+    eng = DcnnServeEngine(MNIST_SMALL, params, backend="pallas",
+                          buckets=(4,))
+    z = rng.randn(4, MNIST_SMALL.z_dim).astype(np.float32)
+    eng.generate(z)                      # compiling call: not sampled
+    assert eng.throughput() == {}
+    for _ in range(4):                   # steady state: 4 samples
+        eng.generate(z)
+    row = eng.throughput()[4]
+    bs = eng.bucket_stats[4]
+    assert row["calls"] == 4
+    mean = bs["seconds"] / 4
+    var = bs["sumsq_seconds"] / 4 - mean ** 2
+    assert row["mean_s"] == pytest.approx(mean)
+    assert row["std_s"] == pytest.approx(max(0.0, var) ** 0.5)
+    assert row["cv"] == pytest.approx(row["std_s"] / row["mean_s"])
+    assert row["std_s"] >= 0.0 and np.isfinite(row["cv"])
+    assert row["img_per_s"] == pytest.approx(
+        bs["images"] / bs["seconds"])
+
+
 def test_sparse_backend_buckets_share_plans(tmp_cache, rng):
     """pallas_sparse serving: the zero-skip schedule is bucket-independent,
     so buckets that agree on channel tiles reuse one plan, and results

@@ -1,0 +1,347 @@
+"""Statistical-calibration int8 quantization subsystem.
+
+Covers: shared quantization math, activation observers, per-channel
+weight calibration, int8-kernel-vs-integer-reference parity (exhaustive
+small shapes incl. non-square and the S=2/K=5 Algorithm-1 case), the
+chained quantized generator, dtype-aware autotuning, the int8 serving
+engine on both paper networks, and MMD-vs-fp32 quality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dse import TPU_V5E, tile_attainable
+from repro.core.tiling import DeconvGeometry, kernel_vmem_bytes
+from repro.kernels.deconv2d import deconv2d_int8, deconv2d_int8_ref
+from repro.models.dcnn import (CELEBA_DCNN, DcnnConfig, DeconvLayerCfg,
+                               MNIST_DCNN, generator_apply, generator_init)
+from repro.quant import (QMAX, LayerQuant, QuantConfig, calibrate,
+                         dequantize_symmetric, fake_quant, observe_amax,
+                         quantize_params, quantize_symmetric,
+                         quantized_generator_apply, quantized_generator_ref,
+                         symmetric_scale)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.setattr(autotune, "_cache", None)
+    yield tmp_path / "at.json"
+    monkeypatch.setattr(autotune, "_cache", None)
+
+
+# ---------------------------------------------------------------------------
+# shared quantization math
+# ---------------------------------------------------------------------------
+def test_qmath_roundtrip_half_step_error(rng):
+    x = jnp.array(rng.randn(512), jnp.float32)
+    scale = symmetric_scale(jnp.max(jnp.abs(x)))
+    q = quantize_symmetric(x, scale)
+    assert q.dtype == jnp.int8
+    assert int(jnp.abs(q).max()) <= QMAX
+    err = jnp.abs(dequantize_symmetric(q, scale) - x).max()
+    assert float(err) <= float(scale) * 0.5 + 1e-9
+    # fake_quant is exactly quantize-then-dequantize
+    np.testing.assert_array_equal(np.asarray(fake_quant(x, scale)),
+                                  np.asarray(dequantize_symmetric(q, scale)))
+
+
+def test_qmath_saturates_and_keeps_zero_exact(rng):
+    x = jnp.array([0.0, 1e6, -1e6, 0.5], jnp.float32)
+    q = quantize_symmetric(x, 1.0)
+    assert q[0] == 0          # symmetric: zero maps to zero (pad-safe)
+    assert q[1] == QMAX and q[2] == -QMAX
+
+
+# ---------------------------------------------------------------------------
+# activation observers
+# ---------------------------------------------------------------------------
+def test_observers_order_on_heavy_tail(rng):
+    """Statistical clipping tightens the range: on long-tailed data both
+    percentile and mean+k-sigma clip below the raw absmax, and the
+    percentile clip tightens as p drops."""
+    x = rng.standard_cauchy(20000).astype(np.float32)
+    amax = observe_amax(x, "minmax")
+    p999 = observe_amax(x, "percentile", percentile=99.9)
+    p99 = observe_amax(x, "percentile", percentile=99.0)
+    ks = observe_amax(x, "mean_ksigma", k=3.0)
+    assert amax == pytest.approx(np.abs(x).max())
+    assert p99 < p999 < amax
+    assert ks < amax
+
+
+def test_observer_mean_ksigma_never_exceeds_minmax(rng):
+    """On short-tailed data mean + k*sigma could overshoot the true max;
+    the observer clamps at it (a clip beyond the data range only wastes
+    integer steps)."""
+    x = np.ones(100, np.float32)  # std 0, mean 1
+    assert observe_amax(x, "mean_ksigma", k=6.0) == pytest.approx(1.0)
+
+
+def test_observer_unknown_strategy_raises():
+    with pytest.raises(ValueError, match="unknown observer"):
+        observe_amax(np.ones(4), "entropy")
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+    with pytest.raises(ValueError, match="unknown observer"):
+        calibrate(params, MNIST_DCNN,
+                  jnp.zeros((4, MNIST_DCNN.z_dim)), strategy="entropy")
+
+
+def test_calibrate_shapes_and_chaining():
+    """One LayerQuant per layer; per-channel weight scales; out_scale(i)
+    chains to layer i+1's input scale and is None for the last layer."""
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+    z = jax.random.normal(jax.random.PRNGKey(1), (8, MNIST_DCNN.z_dim))
+    qcfg = calibrate(params, MNIST_DCNN, z)
+    assert len(qcfg.layers) == len(MNIST_DCNN.layers)
+    for i, (lq, l) in enumerate(zip(qcfg.layers, MNIST_DCNN.layers)):
+        assert lq.x_scale > 0
+        assert len(lq.w_scale) == l.c_out
+        assert all(s > 0 for s in lq.w_scale)
+        if i + 1 < len(qcfg.layers):
+            assert qcfg.out_scale(i) == qcfg.layers[i + 1].x_scale
+    assert qcfg.out_scale(len(qcfg.layers) - 1) is None
+
+
+def test_generator_apply_intermediates_are_layer_inputs():
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+    z = jax.random.normal(jax.random.PRNGKey(1), (4, MNIST_DCNN.z_dim))
+    imgs, inters = generator_apply(params, MNIST_DCNN, z,
+                                   backend="reverse_loop",
+                                   return_intermediates=True)
+    assert len(inters) == len(MNIST_DCNN.layers)
+    assert inters[0].shape == (4, 1, 1, MNIST_DCNN.z_dim)
+    geoms = MNIST_DCNN.geometries()
+    for x_in, g in zip(inters, geoms):
+        assert x_in.shape == (4, g.in_h, g.in_w, g.c_in)
+    assert imgs.shape == (4, 28, 28, 1)
+
+
+def test_quantize_params_per_channel_int8():
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+    z = jax.random.normal(jax.random.PRNGKey(1), (8, MNIST_DCNN.z_dim))
+    qcfg = calibrate(params, MNIST_DCNN, z)
+    qp = quantize_params(params, MNIST_DCNN, qcfg)
+    for i, l in enumerate(MNIST_DCNN.layers):
+        lq = qp[f"l{i}"]
+        assert lq["w_q"].dtype == np.int8
+        assert lq["scale"].shape == (l.c_out,)
+        # per-channel: each channel's max |q| saturates its own range
+        # (the channel absmax quantizes to exactly +-127)
+        q_amax = np.abs(lq["w_q"].reshape(-1, l.c_out)).max(axis=0)
+        assert (q_amax == QMAX).all()
+
+
+# ---------------------------------------------------------------------------
+# int8 kernel vs integer-exact reference
+# ---------------------------------------------------------------------------
+# (ih, iw, ci, co, k, s, p, t) — the Algorithm-1 parity shapes of
+# test_halo_kernel, incl. the OH=7/S=2/K=5 case and non-square images
+INT8_GEOMS = [
+    (4, 4, 6, 5, 5, 2, 2, 4),
+    (4, 6, 3, 4, 5, 2, 2, 4),
+    (7, 7, 8, 8, 4, 2, 1, 4),
+    (3, 5, 4, 3, 3, 1, 1, 3),
+    (4, 5, 2, 3, 5, 3, 1, 6),
+]
+
+
+@pytest.mark.parametrize("geom", INT8_GEOMS)
+@pytest.mark.parametrize("out_scale", [None, 0.04])
+def test_int8_kernel_matches_integer_reference(geom, out_scale, rng):
+    """The kernel's int32 accumulation is integer-exact, so parity with
+    the int32 zero-insertion oracle is near-ulp for the f32 epilogue and
+    within one LSB for the re-quantized int8 output."""
+    ih, iw, ci, co, k, s, p, t = geom
+    xq = jnp.asarray(rng.randint(-QMAX, QMAX + 1, (3, ih, iw, ci)), jnp.int8)
+    wq = jnp.asarray(rng.randint(-QMAX, QMAX + 1, (k, k, ci, co)), jnp.int8)
+    scale = jnp.asarray(rng.rand(co).astype(np.float32) * 1e-3 + 1e-5)
+    b = jnp.asarray(rng.randn(co).astype(np.float32) * 0.1)
+    for act in (None, "relu", "tanh"):
+        y = deconv2d_int8(xq, wq, scale, b, s, p, t_oh=t, t_ow=t,
+                          t_ci=8, t_co=8, t_n=2, activation=act,
+                          out_scale=out_scale)
+        y_ref = deconv2d_int8_ref(xq, wq, scale, b, s, p, activation=act,
+                                  out_scale=out_scale)
+        assert y.shape == y_ref.shape
+        if out_scale is None:
+            assert y.dtype == jnp.float32
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                       rtol=1e-5, atol=1e-5)
+        else:
+            assert y.dtype == jnp.int8
+            # FMA/rounding at exact .5 ties may flip one LSB
+            assert np.abs(np.asarray(y, np.int32)
+                          - np.asarray(y_ref, np.int32)).max() <= 1
+
+
+def test_int8_kernel_ragged_batch_and_channels(rng):
+    """Batch not a t_n multiple + channels not tile multiples: the int8
+    zero padding (symmetric quantization: 0 is exact) must not leak."""
+    xq = jnp.asarray(rng.randint(-QMAX, QMAX + 1, (5, 7, 7, 10)), jnp.int8)
+    wq = jnp.asarray(rng.randint(-QMAX, QMAX + 1, (4, 4, 10, 12)), jnp.int8)
+    scale = jnp.asarray(rng.rand(12).astype(np.float32) * 1e-3)
+    y = deconv2d_int8(xq, wq, scale, None, 2, 1, t_oh=4, t_ow=4,
+                      t_ci=8, t_co=8, t_n=2)
+    y_ref = deconv2d_int8_ref(xq, wq, scale, None, 2, 1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chained quantized generator
+# ---------------------------------------------------------------------------
+TINY = DcnnConfig(
+    name="dcnn-tiny-quant", z_dim=12, img_hw=8, img_c=1,
+    layers=(
+        DeconvLayerCfg(12, 16, 4, 1, 0, "relu"),   # 1x1 -> 4x4
+        DeconvLayerCfg(16, 1, 4, 2, 1, "tanh"),    # 4x4 -> 8x8
+    ),
+)
+
+
+def test_quantized_chain_matches_reference_chain(tmp_cache):
+    params, _ = generator_init(jax.random.PRNGKey(0), TINY)
+    z = jax.random.normal(jax.random.PRNGKey(1), (6, TINY.z_dim))
+    qcfg = calibrate(params, TINY, z)
+    qp = quantize_params(params, TINY, qcfg)
+    y = quantized_generator_apply(qp, TINY, qcfg, z)
+    y_ref = quantized_generator_ref(qp, TINY, qcfg, z)
+    assert y.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_chain_close_to_fp32(tmp_cache):
+    """End-to-end quality: int8 images track the fp32 generator closely
+    on a freshly-initialized MNIST net (tanh output range [-1, 1])."""
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+    z = jax.random.normal(jax.random.PRNGKey(1), (8, MNIST_DCNN.z_dim))
+    qcfg = calibrate(params, MNIST_DCNN, z)
+    qp = quantize_params(params, MNIST_DCNN, qcfg)
+    y = quantized_generator_apply(qp, MNIST_DCNN, qcfg, z)
+    base = generator_apply(params, MNIST_DCNN, z, backend="reverse_loop")
+    assert float(jnp.abs(y - base).max()) < 0.05
+    assert float(jnp.abs(y - base).mean()) < 0.005
+
+
+def test_quant_config_layer_count_mismatch_rejected():
+    params, _ = generator_init(jax.random.PRNGKey(0), TINY)
+    z = jax.random.normal(jax.random.PRNGKey(1), (4, TINY.z_dim))
+    qcfg = calibrate(params, TINY, z)
+    qp = quantize_params(params, TINY, qcfg)
+    bad = QuantConfig(name="bad", strategy="minmax",
+                      layers=(LayerQuant(1.0, (1.0,)),))
+    with pytest.raises(ValueError, match="layers"):
+        quantized_generator_apply(qp, TINY, bad, z)
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware autotuning / DSE
+# ---------------------------------------------------------------------------
+def test_int8_candidates_fit_vmem_at_one_byte(tmp_cache):
+    from repro.kernels.autotune import choose_tiles
+
+    l1 = DeconvGeometry(1, 1, 100, 1024, 4, 1, 0)
+    c = choose_tiles(l1, jnp.int8, backend="pallas", batch=64)
+    assert kernel_vmem_bytes(l1, c.t_oh, c.t_ow, c.t_ci, c.t_co, 1,
+                             t_n=c.t_n) <= TPU_V5E.onchip_bytes
+    # distinct cache entry from the fp32 choice at the same geometry/batch
+    assert choose_tiles(l1, jnp.int8, backend="pallas",
+                        batch=64).source == "cache"
+    assert choose_tiles(l1, jnp.float32, backend="pallas",
+                        batch=64).source != "cache"
+
+
+def test_int8_attainable_beats_fp32(tmp_cache):
+    """The acceptance roofline: at batch 64 the modeled int8 throughput
+    (quarter traffic, doubled MXU peak) is >= 1.5x fp32 on the paper's
+    generator layers."""
+    for g in (CELEBA_DCNN.geometries()[0], MNIST_DCNN.geometries()[0],
+              CELEBA_DCNN.geometries()[1]):
+        from repro.kernels.autotune import choose_tiles
+
+        c8 = choose_tiles(g, jnp.int8, backend="pallas", batch=64)
+        c32 = choose_tiles(g, jnp.float32, backend="pallas", batch=64)
+        a8 = tile_attainable(g, c8.t_oh, c8.t_ow, c8.t_ci, c8.t_co,
+                             TPU_V5E, t_n=c8.t_n, batch=64, dtype_bytes=1)
+        a32 = tile_attainable(g, c32.t_oh, c32.t_ow, c32.t_ci, c32.t_co,
+                              TPU_V5E, t_n=c32.t_n, batch=64, dtype_bytes=4)
+        assert a8.attainable_ops >= 1.5 * a32.attainable_ops, g
+
+
+def test_device_int8_peak_selection():
+    assert TPU_V5E.peak_for(1) == TPU_V5E.int8_peak_ops > TPU_V5E.peak_ops
+    assert TPU_V5E.peak_for(4) == TPU_V5E.peak_ops
+    assert TPU_V5E.peak_for(None) == TPU_V5E.peak_ops
+
+
+# ---------------------------------------------------------------------------
+# int8 serving engine (calibrate -> autotune -> serve)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg,buckets,n", [(MNIST_DCNN, (1, 2, 4), 7),
+                                           (CELEBA_DCNN, (2,), 2)])
+def test_serve_engine_int8_end_to_end(cfg, buckets, n, tmp_cache, rng):
+    from repro.serve.engine import DcnnServeEngine
+
+    params, _ = generator_init(jax.random.PRNGKey(0), cfg)
+    eng = DcnnServeEngine(cfg, params, backend="pallas", precision="int8",
+                          buckets=buckets, calib_batch=16)
+    z = rng.randn(n, cfg.z_dim).astype(np.float32)
+    imgs = eng.generate(z)
+    assert imgs.shape == (n, cfg.img_hw, cfg.img_hw, cfg.img_c)
+    assert imgs.dtype == np.float32
+    base = np.asarray(generator_apply(params, cfg, jnp.asarray(z),
+                                      backend="reverse_loop"))
+    assert np.abs(imgs - base).max() < 0.1
+    assert eng.total_compiles <= len(buckets)
+    # per-bucket tiles were resolved for int8 (cache hit at int8 dtype)
+    from repro.kernels.autotune import choose_tiles
+    g0 = cfg.geometries()[0]
+    hit = choose_tiles(g0, jnp.int8, backend="pallas",
+                       batch=eng.shard_batch(eng.buckets[-1]))
+    assert hit.source == "cache"
+
+
+def test_serve_engine_int8_rejects_non_pallas():
+    from repro.serve.engine import DcnnServeEngine
+
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+    with pytest.raises(ValueError, match="quantized"):
+        DcnnServeEngine(MNIST_DCNN, params, backend="xla",
+                        precision="int8")
+    with pytest.raises(ValueError, match="precision"):
+        DcnnServeEngine(MNIST_DCNN, params, precision="int4")
+
+
+def test_serve_engine_int8_explicit_quant_cfg(tmp_cache, rng):
+    """A pre-computed QuantConfig bypasses self-calibration and is served
+    verbatim (the production path: calibrate offline, deploy the config)."""
+    from repro.serve.engine import DcnnServeEngine
+
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+    z_cal = jax.random.normal(jax.random.PRNGKey(5), (16, MNIST_DCNN.z_dim))
+    qcfg = calibrate(params, MNIST_DCNN, z_cal, strategy="percentile")
+    eng = DcnnServeEngine(MNIST_DCNN, params, backend="pallas",
+                          precision="int8", quant_cfg=qcfg, buckets=(4,))
+    assert eng.quant_cfg is qcfg
+    imgs = eng.generate(rng.randn(4, MNIST_DCNN.z_dim).astype(np.float32))
+    assert np.isfinite(imgs).all()
+
+
+# ---------------------------------------------------------------------------
+# quality harness
+# ---------------------------------------------------------------------------
+def test_mmd_degradation_report(tmp_cache):
+    from repro.quant.evaluate import mmd_degradation
+
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+    rows = mmd_degradation(params, MNIST_DCNN, jax.random.PRNGKey(2),
+                           n=8, calib_n=8, use_kernel=False)
+    assert [r["strategy"] for r in rows] == list(
+        ("minmax", "percentile", "mean_ksigma"))
+    for r in rows:
+        assert np.isfinite(r["mmd_vs_fp32"])
+        assert r["mmd_vs_fp32"] < 0.5       # int8 tracks fp32's distribution
+        assert r["max_abs_err"] < 0.1       # tanh range [-1, 1]

@@ -47,6 +47,39 @@ def test_wgan_gp_trains():
     assert imgs.shape == (2, 16, 16, 1)
 
 
+def test_wgan_fit_streaming_iterator_drains_exactly():
+    """Satellite (ROADMAP open item): `fit` accepts a streaming batch
+    iterator.  A finite iterator is consumed one batch per critic
+    sub-step and training stops the moment it drains — no synthetic
+    batches are invented past its end, and the iterator is left fully
+    exhausted."""
+    from repro.data.pipeline import finite_batches
+    from repro.train.wgan import WganTrainer
+
+    src = _TinySource()
+    stream = finite_batches(src, 3)     # 3 batches, n_critic=1 -> 3 steps
+    t = WganTrainer(TINY, AdamW(lr=1e-4, b1=0.5, b2=0.9),
+                    AdamW(lr=1e-4, b1=0.5, b2=0.9), n_critic=1)
+    gp, dp, hist = t.fit(stream, 10, jax.random.PRNGKey(0), log_every=1)
+    assert [h["step"] for h in hist] == [0, 1, 2]
+    assert next(stream, None) is None   # drained exactly
+    assert all(np.isfinite(v) for h in hist for v in h.values())
+
+    # n_critic=2 over 5 batches: 2 full steps; the dangling 5th batch must
+    # not produce an unpaired generator update (history stops at step 1)
+    t2 = WganTrainer(TINY, AdamW(lr=1e-4, b1=0.5, b2=0.9),
+                     AdamW(lr=1e-4, b1=0.5, b2=0.9), n_critic=2)
+    _, _, hist2 = t2.fit(finite_batches(src, 5), 10, jax.random.PRNGKey(0),
+                         log_every=1)
+    assert [h["step"] for h in hist2] == [0, 1]
+    # bare-array streams (no dict wrapper) work too
+    t3 = WganTrainer(TINY, AdamW(lr=1e-4, b1=0.5, b2=0.9),
+                     AdamW(lr=1e-4, b1=0.5, b2=0.9), n_critic=1)
+    _, _, hist3 = t3.fit(iter([src.batch(0)["images"]] * 2), 10,
+                         jax.random.PRNGKey(0), log_every=1)
+    assert [h["step"] for h in hist3] == [0, 1]
+
+
 def test_wgan_n_critic_zero_raises():
     """Regression: n_critic=0 used to crash with an unbound `real` at the
     gen_step call; it is now rejected up front."""
