@@ -305,6 +305,78 @@ def print_quant(rows):
               f"{r['modeled_speedup']:7.2f}x  {mmds}")
 
 
+def plan_rows(batch: int = 64, stream=(3, 5, 8, 2, 8, 7)):
+    """Plan/execute acceptance: plan building is a one-time cost, never a
+    per-call one.
+
+    Per network: wall-clock of a cold `build_network_plan` (autotune
+    cache interaction included) vs a warm rebuild, JSON round-trip
+    hash-equality, and the plan's modeled network throughput.  Then the
+    MNIST generator serves a mixed-size stream through the
+    EngineConfig-driven engine and the row pins zero per-call
+    re-planning: plan builds == buckets touched == compile count
+    (trace_counts match the PR 4 serving numbers — one trace per
+    bucket)."""
+    import time as _time
+
+    from repro.plan import NetworkPlan, build_network_plan
+    from repro.serve import DcnnServeEngine, EngineConfig
+
+    rows = []
+    for cfg in (MNIST_DCNN, CELEBA_DCNN):
+        t0 = _time.perf_counter()
+        plan = build_network_plan(cfg, batch=batch, backend="pallas")
+        cold_s = _time.perf_counter() - t0
+        t0 = _time.perf_counter()
+        build_network_plan(cfg, batch=batch, backend="pallas")
+        warm_s = _time.perf_counter() - t0
+        rt = NetworkPlan.from_json(plan.to_json())
+        row = {
+            "net": cfg.name, "batch": batch,
+            "plan_build_cold_s": cold_s,
+            "plan_build_warm_s": warm_s,
+            "roundtrip_hash_equal": rt.stable_hash() == plan.stable_hash(),
+            "modeled_network_gops": plan.modeled_network_ops() / 1e9,
+        }
+        if cfg is MNIST_DCNN:
+            params, _ = generator_init(jax.random.PRNGKey(0), cfg)
+            eng = DcnnServeEngine.from_config(
+                EngineConfig(model=cfg, backend="pallas",
+                             buckets=(1, 2, 4, 8), warmup=True), params)
+            builds_after_warmup = eng.plan_stats["builds"]
+            rng = np.random.RandomState(0)
+            for n in stream:
+                eng.generate(rng.randn(n, cfg.z_dim).astype(np.float32))
+            row.update({
+                "serve_buckets": list(eng.buckets),
+                "serve_trace_counts": {str(k): v
+                                       for k, v in eng.trace_counts.items()},
+                "serve_plan_builds": eng.plan_stats["builds"],
+                "serve_plan_build_s": eng.plan_stats["build_seconds"],
+                # the acceptance bit: the request stream triggered zero
+                # re-planning beyond the per-bucket warmup builds
+                "replan_calls_after_warmup":
+                    eng.plan_stats["builds"] - builds_after_warmup,
+            })
+        rows.append(row)
+    return rows
+
+
+def print_plan_rows(rows):
+    print("# plan/execute: one-time plan build cost, JSON round-trip, and "
+          "zero per-call re-planning through the EngineConfig engine")
+    for r in rows:
+        extra = ""
+        if "serve_plan_builds" in r:
+            extra = (f" serve: builds={r['serve_plan_builds']} "
+                     f"replans-after-warmup={r['replan_calls_after_warmup']} "
+                     f"traces={r['serve_trace_counts']}")
+        print(f"{r['net']:13s} build {r['plan_build_cold_s']*1e3:7.1f} ms "
+              f"cold / {r['plan_build_warm_s']*1e3:6.1f} ms warm, "
+              f"roundtrip={'ok' if r['roundtrip_hash_equal'] else 'FAIL'}, "
+              f"modeled {r['modeled_network_gops']:8.0f} GOps/s{extra}")
+
+
 def serving_sweep_rows(reps: int = 3, stream=(3, 5, 1, 8, 2, 6, 4, 7)):
     """Bucketed serving engine on the MNIST generator: a mixed-size request
     stream through `DcnnServeEngine.submit/collect`, reporting end-to-end
@@ -312,11 +384,12 @@ def serving_sweep_rows(reps: int = 3, stream=(3, 5, 1, 8, 2, 6, 4, 7)):
     no-per-request-recompilation acceptance: <= len(buckets))."""
     import time as _time
 
-    from repro.serve.engine import DcnnServeEngine
+    from repro.serve import DcnnServeEngine, EngineConfig
 
     params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
-    eng = DcnnServeEngine(MNIST_DCNN, params, backend="pallas",
-                          buckets=(1, 2, 4, 8), warmup=True)
+    eng = DcnnServeEngine.from_config(
+        EngineConfig(model=MNIST_DCNN, backend="pallas",
+                     buckets=(1, 2, 4, 8), warmup=True), params)
     rng = np.random.RandomState(0)
     lat = []
     n_imgs = 0
@@ -370,15 +443,16 @@ def sharded_rows(devices: int = 8, stream=(5, 8, 19)):
         import numpy as np
         from repro.launch.mesh import make_serving_mesh
         from repro.models.dcnn import MNIST_DCNN, generator_init
-        from repro.serve.engine import DcnnServeEngine
+        from repro.serve import DcnnServeEngine, EngineConfig
 
         params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
         mesh = make_serving_mesh()
-        eng = DcnnServeEngine(MNIST_DCNN, params, backend="pallas",
-                              mesh=mesh, buckets=(1, 2, 4, 8, 16),
-                              warmup=True)
-        ref = DcnnServeEngine(MNIST_DCNN, params, backend="pallas",
-                              buckets=eng.buckets)
+        eng = DcnnServeEngine.from_config(
+            EngineConfig(model=MNIST_DCNN, backend="pallas", mesh=mesh,
+                         buckets=(1, 2, 4, 8, 16), warmup=True), params)
+        ref = DcnnServeEngine.from_config(
+            EngineConfig(model=MNIST_DCNN, backend="pallas",
+                         buckets=eng.buckets), params)
         rng = np.random.RandomState(0)
         err = 0.0
         for n in {tuple(stream)}:
@@ -421,14 +495,16 @@ def print_sharded(row):
 
 
 def write_json(path: str, table2, traffic, autotune, scaling,
-               batch_sweep=None, serving=None, sharded=None, quant=None):
+               batch_sweep=None, serving=None, sharded=None, quant=None,
+               plan=None):
     with open(path, "w") as f:
         json.dump({"table2": table2, "traffic": traffic,
                    "autotune": autotune, "scaling": scaling,
                    "batch_sweep": batch_sweep or [],
                    "serving": serving or {},
                    "sharded": sharded or {},
-                   "quant": quant or []},
+                   "quant": quant or [],
+                   "plan": plan or []},
                   f, indent=1, default=float)
     print(f"[bench_deconv] wrote {path}")
 
@@ -506,6 +582,7 @@ def main(reps: int = 50, smoke: bool = False,
         serving = serving_sweep_rows(reps=1)
         sharded = sharded_rows(devices=8, stream=(5, 8))
         q_rows = quant_rows(batch=64, mmd_n=16, calib_n=32)
+        p_rows = plan_rows(batch=64)
         print_traffic(t_rows)
         print()
         print_scaling(s_rows)
@@ -519,8 +596,10 @@ def main(reps: int = 50, smoke: bool = False,
         print_sharded(sharded)
         print()
         print_quant(q_rows)
+        print()
+        print_plan_rows(p_rows)
         write_json(json_path, [], t_rows, a_rows, s_rows, b_rows, serving,
-                   sharded, q_rows)
+                   sharded, q_rows, p_rows)
         return []
     rows = run(reps)
     print("# Table II analogue: GOps/s mean (cv) per layer; cv = run-to-run "
@@ -558,8 +637,11 @@ def main(reps: int = 50, smoke: bool = False,
     print()
     q_rows = quant_rows(batch=64, mmd_n=32, calib_n=64)
     print_quant(q_rows)
+    print()
+    p_rows = plan_rows(batch=64)
+    print_plan_rows(p_rows)
     write_json(json_path, rows, t_rows, a_rows, s_rows, b_rows, serving,
-               sharded, q_rows)
+               sharded, q_rows, p_rows)
     return rows
 
 

@@ -5,31 +5,37 @@
 1. reverse-loop deconvolution (Pallas kernel) vs the XLA baseline,
 2. design-space exploration for the tiling factor (Fig. 5),
 3. a few WGAN-GP training steps on synthetic digits,
-4. batched image serving through the accelerator path.
+4. plan/execute serving: build a NetworkPlan once (the paper's
+   plan-then-execute split — geometry, tiles, precision pinned like a
+   bitstream), then serve it through the EngineConfig-driven engine.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import TPU_V5E, optimize_unified_tile
+from repro.core.tiling import DeconvGeometry
 from repro.data.pipeline import image_source
 from repro.kernels.deconv2d import deconv2d, deconv2d_ref
 from repro.models.dcnn import MNIST_DCNN
 from repro.optim.optimizer import AdamW
-from repro.serve.engine import DcnnServeEngine
+from repro.plan import build_layer_plan, build_network_plan
+from repro.serve import DcnnServeEngine, EngineConfig
 from repro.train.wgan import train_wgan
 
 
 def main():
-    # 1 — the kernel
+    # 1 — the kernel, dispatched through a per-layer DeconvPlan
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (2, 7, 7, 256), jnp.float32)
     w = jax.random.normal(key, (4, 4, 256, 128), jnp.float32) * 0.05
     b = jnp.zeros((128,), jnp.float32)
-    y = deconv2d(x, w, b, stride=2, padding=1)
+    lplan = build_layer_plan(DeconvGeometry(7, 7, 256, 128, 4, 2, 1),
+                             batch=2)
+    y = deconv2d(x, w, b, plan=lplan)
     y_ref = deconv2d_ref(x, w, b, 2, 1)
-    print(f"[kernel] out {y.shape}, max|err| vs oracle = "
-          f"{float(jnp.abs(y - y_ref).max()):.2e}")
+    print(f"[kernel] out {y.shape} via plan {lplan.tiles.as_kwargs()}, "
+          f"max|err| vs oracle = {float(jnp.abs(y - y_ref).max()):.2e}")
 
     # 2 — DSE (paper Fig. 5)
     best, scores = optimize_unified_tile(MNIST_DCNN.geometries(), TPU_V5E)
@@ -46,11 +52,18 @@ def main():
     print(f"[wgan] d_loss {hist[0]['d_loss']:.3f} -> {hist[-1]['d_loss']:.3f}"
           f", gp {hist[-1]['gp']:.3f}")
 
-    # 4 — serving (the paper's inference workload)
-    eng = DcnnServeEngine(MNIST_DCNN, gp, backend="pallas")
+    # 4 — plan/execute serving (the paper's inference workload): the
+    # network plan pins tiles + epilogues once; the engine executes it
+    nplan = build_network_plan(MNIST_DCNN, batch=8, backend="pallas")
+    print(f"[plan] {nplan.name} hash={nplan.stable_hash()} "
+          f"modeled {nplan.modeled_network_ops()/1e9:.0f} GOps/s at batch 8")
+    eng = DcnnServeEngine.from_config(
+        EngineConfig(model=MNIST_DCNN, backend="pallas", buckets=(1, 2, 4, 8)),
+        gp, plan=nplan)
     imgs = eng.generate(np.random.randn(8, 100).astype(np.float32))
     print(f"[serve] generated {imgs.shape} images in "
-          f"[{imgs.min():.2f}, {imgs.max():.2f}]")
+          f"[{imgs.min():.2f}, {imgs.max():.2f}] "
+          f"({eng.plan_stats['builds']} plan builds beyond the pinned one)")
 
 
 if __name__ == "__main__":

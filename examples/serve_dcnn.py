@@ -1,8 +1,14 @@
 """Serving driver (the paper's actual workload): batched DCNN inference
-through the reverse-loop accelerator path, with the paper's throughput and
+through the plan/execute engine, with the paper's throughput and
 run-to-run-variation measurement.
 
     PYTHONPATH=src python examples/serve_dcnn.py [--net celeba] [--reqs 20]
+                                                 [--precision int8]
+                                                 [--plan-json plan.json]
+
+``--plan-json`` writes the engine's largest-bucket NetworkPlan to disk —
+the artifact a deployment pins next to its checkpoint and reloads with
+``NetworkPlan.load`` to serve exactly the validated configuration.
 """
 import argparse
 import time
@@ -11,7 +17,7 @@ import jax
 import numpy as np
 
 from repro.models.dcnn import CELEBA_DCNN, MNIST_DCNN, generator_init
-from repro.serve.engine import DcnnServeEngine
+from repro.serve import DcnnServeEngine, EngineConfig
 
 
 def main():
@@ -21,14 +27,21 @@ def main():
     ap.add_argument("--reqs", type=int, default=20)
     ap.add_argument("--backend", default="reverse_loop",
                     choices=["reverse_loop", "xla", "pallas"])
+    ap.add_argument("--precision", default="fp32", choices=["fp32", "int8"])
+    ap.add_argument("--plan-json", default=None,
+                    help="write the largest bucket's NetworkPlan here")
     args = ap.parse_args()
 
     cfg = MNIST_DCNN if args.net == "mnist" else CELEBA_DCNN
     params, _ = generator_init(jax.random.PRNGKey(0), cfg)
-    # bucketed engine: one compiled executable per power-of-two bucket,
+    # plan/execute engine: one EngineConfig instead of a kwarg pile, one
+    # pinned NetworkPlan + compiled executable per power-of-two bucket,
     # pre-compiled by warmup; mixed request sizes never recompile.
-    eng = DcnnServeEngine(cfg, params, backend=args.backend,
-                          max_batch=args.batch, warmup=True)
+    eng = DcnnServeEngine.from_config(
+        EngineConfig(model=cfg, backend=args.backend,
+                     precision=args.precision, max_batch=args.batch,
+                     warmup=True, calib_batch=32),
+        params)
 
     ops_per_img = sum(g.ops for g in cfg.geometries())
     rng = np.random.RandomState(0)
@@ -45,11 +58,16 @@ def main():
         lat.append((time.perf_counter() - t0) / n)
     lat = np.array(lat)
     gops = ops_per_img / lat / 1e9
-    print(f"{cfg.name} x<= {args.batch} via {args.backend}: "
+    print(f"{cfg.name} x<= {args.batch} via {args.backend}/{args.precision}: "
           f"{gops.mean():.2f} GOps/s (std {gops.std():.2f}; "
           f"cv {lat.std()/lat.mean():.3f}) — "
           f"{1000*lat.mean():.2f} ms/image, last images {imgs.shape}, "
-          f"{eng.total_compiles} compiles over {len(eng.buckets)} buckets")
+          f"{eng.total_compiles} compiles / {eng.plan_stats['builds']} plan "
+          f"builds over {len(eng.buckets)} buckets")
+    if args.plan_json:
+        plan = eng.plans[eng.max_bucket]
+        plan.to_json(args.plan_json)
+        print(f"pinned plan {plan.stable_hash()} -> {args.plan_json}")
 
 
 if __name__ == "__main__":

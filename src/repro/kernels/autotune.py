@@ -43,7 +43,13 @@ _CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 # a v2 entry — ranked with the device's native width regardless of the
 # request — is stale even though its key already named the dtype.
 # `_load_cache` drops every key from a different schema version.
-_CACHE_VERSION = 3
+# v4: keys are no longer hand-assembled tuples — the planning inputs are
+# canonicalized by `plan.DeconvPlan.stable_hash(scope="tiles")`, so a new
+# field (dtype, t_n-relevant batch, out_dtype_bytes, backend, ...) can
+# never be forgotten from the key and silently alias two requests again.
+# v3 keys, which did hand-assemble, are dropped on load like every other
+# stale schema.
+_CACHE_VERSION = 4
 _lock = threading.Lock()
 _cache: Optional[Dict[str, dict]] = None
 
@@ -59,7 +65,9 @@ class TileChoice:
     t_ci: int
     t_co: int
     t_n: int = 1              # batch tile (images per grid program)
-    source: str = "model"     # cache | model | timed | fallback
+    # provenance, not semantics: two choices with the same factors are the
+    # same executable wherever they came from (plan equality relies on it)
+    source: str = dataclasses.field(default="model", compare=False)
     attainable_ops: float = 0.0
     vmem_bytes: int = 0
 
@@ -83,19 +91,31 @@ def cache_path() -> pathlib.Path:
 def cache_key(geom: DeconvGeometry, dtype, backend: str,
               device: Device = TPU_V5E, batch: int = 1,
               out_dtype_bytes: Optional[int] = None) -> str:
-    d = np.dtype(dtype).name
-    # the platform and the modeled device are part of the key: refine=True
-    # timings taken in CPU interpret mode must never be served as
-    # authoritative on TPU, and a choice fitted to one device's VMEM
-    # budget/roofline must not leak to another's.  The batch joins the key
-    # because t_n is chosen against it (one entry per serving bucket); the
-    # output width joins it when it differs from the input dtype's (the
-    # last int8 layer writes f32) because the VMEM/traffic ranking does.
+    """v4 cache key: a `DeconvPlan` content hash over the tile-planning
+    inputs (geometry, dtype, batch, backend, epilogue output width).
+
+    The platform and the modeled device stay in the readable prefix:
+    refine=True timings taken in CPU interpret mode must never be served
+    as authoritative on TPU, and a choice fitted to one device's VMEM
+    budget/roofline must not leak to another's.  Everything else is
+    hashed through one canonical dict — the schema-v3 failure mode
+    (a new ranking input hand-appended to the key string, or forgotten
+    from it) cannot alias entries anymore."""
+    from ..plan import DeconvPlan
+
+    plan = DeconvPlan(geometry=geom, batch=batch,
+                      dtype=np.dtype(dtype).name, backend=backend,
+                      out_dtype_bytes=out_dtype_bytes)
+    return plan_cache_key(plan, device)
+
+
+def plan_cache_key(plan, device: Device = TPU_V5E) -> str:
+    """Cache key for a (possibly unresolved) `plan.DeconvPlan`: a resolved
+    plan and the bare planning request hash identically, so the tiles a
+    plan was built with are exactly the tiles its key serves back."""
     plat = jax.default_backend()
-    ob = "" if out_dtype_bytes is None else f"|o{out_dtype_bytes}"
-    return (f"v{_CACHE_VERSION}|{plat}|{device.name}|{backend}|{d}|"
-            f"n{batch}|i{geom.in_h}x{geom.in_w}|c{geom.c_in}>{geom.c_out}|"
-            f"k{geom.kernel}s{geom.stride}p{geom.padding}{ob}")
+    return (f"v{_CACHE_VERSION}|{plat}|{device.name}|"
+            f"{plan.stable_hash(scope='tiles')}")
 
 
 def _valid_entry(v) -> bool:
@@ -358,15 +378,18 @@ def _time_candidate(
         from .deconv2d_sparse import deconv2d_sparse as fn
     else:
         fn = deconv2d
+    from .deconv2d.ops import suppress_tile_warnings
+
     kwargs = choice.as_kwargs()
-    jax.block_until_ready(
-        fn(x, w, None, geom.stride, geom.padding, **kwargs))  # compile
-    ts = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
+    with suppress_tile_warnings():  # internal harness, not a user call
         jax.block_until_ready(
-            fn(x, w, None, geom.stride, geom.padding, **kwargs))
-        ts.append(time.perf_counter() - t0)
+            fn(x, w, None, geom.stride, geom.padding, **kwargs))  # compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                fn(x, w, None, geom.stride, geom.padding, **kwargs))
+            ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
 
 

@@ -242,8 +242,8 @@ def deconv2d_int8(
     w: jax.Array,
     scale: jax.Array,
     b: Optional[jax.Array],
-    stride: int,
-    padding: int,
+    stride: Optional[int] = None,
+    padding: Optional[int] = None,
     t_oh: Optional[int] = None,
     t_ow: Optional[int] = None,
     t_ci: Optional[int] = None,
@@ -253,6 +253,7 @@ def deconv2d_int8(
     out_scale: Optional[float] = None,
     interpret: Optional[bool] = None,
     autotune: bool = True,
+    plan=None,
 ) -> jax.Array:
     """Quantized transposed conv through the int8 reverse-loop kernel.
 
@@ -261,14 +262,35 @@ def deconv2d_int8(
     (see `quant.calibrate.quantize_params`); b: (CO,) f32 or None.
     ``out_scale`` (a static float) re-quantizes the activated output to
     int8 for the next quantized layer; ``None`` emits f32.
-    Unspecified tile factors resolve through the dtype-aware autotuner —
-    the int8 byte width flows into the VMEM/traffic models and the int8
-    MXU peak into the roofline ranking.
+
+    ``plan`` (a `repro.plan.DeconvPlan` built at precision int8) pins the
+    whole epilogue — tiles, activation AND requant out_scale — and skips
+    tile resolution entirely.  Without a plan, unspecified tile factors
+    resolve through the dtype-aware autotuner — the int8 byte width flows
+    into the VMEM/traffic models and the int8 MXU peak into the roofline
+    ranking — and explicit tile kwargs are deprecated.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    from .ops import resolve_tiles
+    from .ops import check_layer_plan, resolve_tiles, warn_legacy_tiles
 
+    if plan is not None:
+        check_layer_plan(plan, x, w, "pallas", "deconv2d_int8")
+        t = plan.tiles
+        if activation is None:
+            activation = plan.activation
+        if out_scale is None:
+            out_scale = plan.out_scale
+        return _deconv2d_int8_jit(
+            x, w, jnp.asarray(scale), b, plan.geometry.stride,
+            plan.geometry.padding, t.t_oh, t.t_ow, t.t_ci, t.t_co, t.t_n,
+            activation, out_scale, interpret,
+        )
+    if stride is None or padding is None:
+        raise TypeError(
+            "deconv2d_int8 needs stride and padding (or a plan=)")
+    if any(v is not None for v in (t_oh, t_ow, t_ci, t_co, t_n)):
+        warn_legacy_tiles("deconv2d_int8")
     t_oh, t_ow, t_ci, t_co, t_n = resolve_tiles(
         x, w, stride, padding, t_oh, t_ow, t_ci, t_co, t_n,
         backend="pallas", autotune=autotune,

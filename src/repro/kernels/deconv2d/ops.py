@@ -1,17 +1,19 @@
 """Public wrapper for the deconv2d Pallas kernel.
 
-`deconv2d` is a thin host-side wrapper: it resolves geometry and the tile
-assignment (explicit overrides > autotuner > clamped fallback heuristic)
-and dispatches into the jit'd `_deconv2d_jit`, which performs the halo /
-channel padding and invokes the kernel.  Tile resolution is pure host
-arithmetic over static shapes, so the wrapper also works while being
-traced inside an outer jit (timing refinement is skipped there — pass
-pre-resolved tiles, e.g. from serve.engine, for timed choices).
+`deconv2d` is a thin plan dispatcher: the preferred fast path takes a
+pre-built `plan.DeconvPlan` (geometry, tiles, fused epilogue all pinned
+at plan time) and goes straight into the jit'd `_deconv2d_jit`, which
+performs the halo / channel padding and invokes the kernel.  The legacy
+surface — explicit tile kwargs, or none at all — resolves tiles
+(explicit overrides > autotuner > clamped fallback heuristic) into an
+ad-hoc plan and routes through the same path; passing tile kwargs
+directly is deprecated in favor of building the plan once.
 
 On non-TPU backends the kernel runs in interpret mode."""
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -20,6 +22,57 @@ import jax.numpy as jnp
 from ...core.offsets import make_phase_plan
 from ...core.tiling import DeconvGeometry, out_size
 from .kernel import deconv2d_pallas_call
+
+_warned_tile_kwargs = set()
+_suppress_tile_warnings = 0
+
+
+class suppress_tile_warnings:
+    """Context manager for the library's own supported legacy surfaces
+    (``generator_apply(tile_overrides=...)`` and friends): they forward
+    tile kwargs into the wrappers on the user's behalf, and must not nag
+    the user about an expansion the user never wrote."""
+
+    def __enter__(self):
+        global _suppress_tile_warnings
+        _suppress_tile_warnings += 1
+
+    def __exit__(self, *exc):
+        global _suppress_tile_warnings
+        _suppress_tile_warnings -= 1
+
+
+def warn_legacy_tiles(fn_name: str) -> None:
+    """One DeprecationWarning per wrapper per process for direct tile
+    kwargs — the call still works (routed through the plan path), but the
+    plan API is where new capability (int4, mixed precision) lands."""
+    if _suppress_tile_warnings or fn_name in _warned_tile_kwargs:
+        return
+    _warned_tile_kwargs.add(fn_name)
+    warnings.warn(
+        f"passing tile kwargs (t_oh/t_ow/t_ci/t_co/t_n) directly to "
+        f"{fn_name} is deprecated: build a repro.plan.DeconvPlan once "
+        f"(plan.build_layer_plan) and pass it via plan=",
+        DeprecationWarning, stacklevel=3)
+
+
+def check_layer_plan(plan, x: jax.Array, w: jax.Array, backend: str,
+                     fn_name: str) -> None:
+    """Fail loudly when a plan is executed against data it was not built
+    for — the pinned-configuration contract."""
+    n, ih, iw, ci = x.shape
+    k, _, wci, co = w.shape
+    g = plan.geometry
+    if (ih, iw, ci, co, k) != (g.in_h, g.in_w, g.c_in, g.c_out, g.kernel) \
+            or wci != g.c_in:
+        raise ValueError(
+            f"{fn_name}: plan geometry {g} does not match x{x.shape} / "
+            f"w{w.shape}")
+    if plan.backend != backend:
+        raise ValueError(
+            f"{fn_name}: plan was built for backend={plan.backend!r}")
+    if plan.tiles is None:
+        raise ValueError(f"{fn_name}: plan has no resolved tiles")
 
 
 def _round_up(x: int, m: int) -> int:
@@ -148,8 +201,8 @@ def deconv2d(
     x: jax.Array,
     w: jax.Array,
     b: Optional[jax.Array],
-    stride: int,
-    padding: int,
+    stride: Optional[int] = None,
+    padding: Optional[int] = None,
     t_oh: Optional[int] = None,
     t_ow: Optional[int] = None,
     t_ci: Optional[int] = None,
@@ -158,20 +211,43 @@ def deconv2d(
     activation: Optional[str] = None,
     interpret: Optional[bool] = None,
     autotune: bool = True,
+    plan=None,
 ) -> jax.Array:
     """Transposed conv y = act(deconv(x, w) + b) via the reverse-loop kernel.
 
     x: (N, IH, IW, CI); w: (K, K, CI, CO); b: (CO,) or None.
     Output: (N, OH, OW, CO), OH = (IH-1)*S + K - 2P.
     `activation` ("relu"/"tanh"/None) runs fused in the kernel's flush phase.
-    ``t_n`` is the batch tile: each grid program owns ``t_n`` images and the
-    tap matmuls contract over ``t_n * T_OH/S * T_OW/S`` rows (the batch is
-    zero-padded to a ``t_n`` multiple and sliced back).  Unspecified tile
-    factors come from the DSE autotuner cache/model (`autotune=False`
-    selects the clamped fixed heuristic instead).
+
+    **Plan fast path** — ``plan`` is a `repro.plan.DeconvPlan`: stride,
+    padding, the full tile assignment and the fused activation all come
+    pre-resolved from the plan; nothing is re-decided here.  An explicit
+    ``activation`` argument overrides the plan's.
+
+    **Legacy path** — without a plan, ``stride``/``padding`` are required;
+    unspecified tile factors come from the DSE autotuner cache/model
+    (`autotune=False` selects the clamped fixed heuristic), explicit tile
+    kwargs are deprecated, and the resolved choice routes through the same
+    jit as the plan path (bit-identical executables).  ``t_n`` is the
+    batch tile: each grid program owns ``t_n`` images and the tap matmuls
+    contract over ``t_n * T_OH/S * T_OW/S`` rows (the batch is zero-padded
+    to a ``t_n`` multiple and sliced back).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if plan is not None:
+        check_layer_plan(plan, x, w, "pallas", "deconv2d")
+        t = plan.tiles
+        if activation is None:
+            activation = plan.activation
+        return _deconv2d_jit(
+            x, w, b, plan.geometry.stride, plan.geometry.padding,
+            t.t_oh, t.t_ow, t.t_ci, t.t_co, t.t_n, activation, interpret,
+        )
+    if stride is None or padding is None:
+        raise TypeError("deconv2d needs stride and padding (or a plan=)")
+    if any(v is not None for v in (t_oh, t_ow, t_ci, t_co, t_n)):
+        warn_legacy_tiles("deconv2d")
     t_oh, t_ow, t_ci, t_co, t_n = resolve_tiles(
         x, w, stride, padding, t_oh, t_ow, t_ci, t_co, t_n,
         backend="pallas", autotune=autotune,

@@ -16,7 +16,8 @@ import numpy as np
 from ...core.offsets import make_phase_plan
 from ...core.sparsity import block_mask
 from ...core.tiling import out_size
-from ..deconv2d.ops import _round_up, resolve_tiles
+from ..deconv2d.ops import (_round_up, check_layer_plan, resolve_tiles,
+                            warn_legacy_tiles)
 from .kernel import build_schedule, deconv2d_sparse_pallas_call
 
 
@@ -79,8 +80,8 @@ def deconv2d_sparse(
     x: jax.Array,
     w: jax.Array,
     b: Optional[jax.Array],
-    stride: int,
-    padding: int,
+    stride: Optional[int] = None,
+    padding: Optional[int] = None,
     t_oh: Optional[int] = None,
     t_ow: Optional[int] = None,
     t_ci: Optional[int] = None,
@@ -89,21 +90,42 @@ def deconv2d_sparse(
     activation: Optional[str] = None,
     interpret: Optional[bool] = None,
     autotune: bool = True,
-    plan: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None,
+    plan=None,
 ) -> jax.Array:
     """Sparse transposed conv; weights are expected pre-pruned (zeros).
 
-    ``plan`` is a precomputed `make_sparse_plan` result (built with the
-    same t_ci/t_co); serving paths pass it to avoid re-deriving the static
-    schedule — an O(weights) host computation — on every call.  ``t_n``
-    batch-tiles the grid exactly as in the dense kernel (the schedule is
-    batch-independent, so one plan serves every bucket)."""
+    ``plan`` is either a `repro.plan.DeconvPlan` (the fast path: tiles,
+    fused activation AND the zero-skip schedule all pinned at plan time)
+    or — legacy — a bare `make_sparse_plan` tables tuple built with the
+    same t_ci/t_co; both avoid re-deriving the static schedule, an
+    O(weights) host computation, on every call.  ``t_n`` batch-tiles the
+    grid exactly as in the dense kernel (the schedule is batch-
+    independent, so one plan serves every bucket)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    t_oh, t_ow, t_ci, t_co, t_n = resolve_tiles(
-        x, w, stride, padding, t_oh, t_ow, t_ci, t_co, t_n,
-        backend="pallas_sparse", autotune=autotune,
-    )
+    if plan is not None and hasattr(plan, "geometry"):
+        check_layer_plan(plan, x, w, "pallas_sparse", "deconv2d_sparse")
+        t = plan.tiles
+        if activation is None:
+            activation = plan.activation
+        tables = plan.sparse_tables
+        if tables is None:
+            tables = make_sparse_plan(np.asarray(w), plan.geometry.stride,
+                                      plan.geometry.padding, t.t_ci, t.t_co)
+        stride, padding = plan.geometry.stride, plan.geometry.padding
+        t_oh, t_ow, t_ci, t_co, t_n = t.t_oh, t.t_ow, t.t_ci, t.t_co, t.t_n
+        plan = tables
+    else:
+        if stride is None or padding is None:
+            raise TypeError(
+                "deconv2d_sparse needs stride and padding (or a "
+                "repro.plan.DeconvPlan via plan=)")
+        if any(v is not None for v in (t_oh, t_ow, t_ci, t_co, t_n)):
+            warn_legacy_tiles("deconv2d_sparse")
+        t_oh, t_ow, t_ci, t_co, t_n = resolve_tiles(
+            x, w, stride, padding, t_oh, t_ow, t_ci, t_co, t_n,
+            backend="pallas_sparse", autotune=autotune,
+        )
     if plan is None:
         plan = make_sparse_plan(np.asarray(w), stride, padding, t_ci, t_co)
     ci_idx, valid, tap_mask = plan

@@ -117,18 +117,33 @@ def generator_apply(
     tile_overrides: Optional[Dict[int, Any]] = None,
     sparse_plans: Optional[Dict[int, Any]] = None,
     return_intermediates: bool = False,
+    plan=None,
 ):
     """z: (B, z_dim) -> images (B, H, W, C) in [-1, 1].
+
+    ``plan`` is a `repro.plan.NetworkPlan` (fp32 precision): the backend,
+    per-layer tiles, fused epilogues and zero-skip schedules all come
+    pinned from the plan — the preferred serving path (int8 plans run
+    through `quant.infer.quantized_generator_apply` instead).  Without a
+    plan, ``backend`` selects the formulation, ``tile_overrides`` maps
+    layer index -> TileChoice / square extent, and ``sparse_plans`` maps
+    layer index -> precomputed `make_sparse_plan` result for
+    backend="pallas_sparse" (see serve.DcnnServeEngine).
 
     On the pallas backends each layer's bias + activation run fused in the
     kernel's flush phase, so the chain never materializes a pre-activation
     layer in HBM; the other backends apply the activation separately.
-    ``sparse_plans`` maps layer index -> precomputed `make_sparse_plan`
-    result for backend="pallas_sparse" (see serve.DcnnServeEngine).
     ``return_intermediates=True`` additionally returns the list of
     per-layer *inputs* (the tensors quantization calibrates against —
     see quant.calibrate): ``(images, [x_0, ..., x_{L-1}])``.
     """
+    if plan is not None:
+        if plan.precision != "fp32":
+            raise ValueError(
+                f"generator_apply executes fp32 plans; a {plan.precision!r} "
+                "plan runs through quant.infer.quantized_generator_apply")
+        plan.validate_for(cfg)
+        backend = plan.backend
     x = z.reshape(z.shape[0], 1, 1, cfg.z_dim).astype(cfg.jdtype)
     x = constrain(x, "batch", None, None, None)
     inters = []
@@ -136,7 +151,7 @@ def generator_apply(
         if return_intermediates:
             inters.append(x)
         w, b = p[f"l{i}"]["w"], p[f"l{i}"]["b"]
-        tiles = _tile_kwargs((tile_overrides or {}).get(i))
+        lp = plan.layers[i] if plan is not None else None
         fused = backend in ("pallas", "pallas_sparse")
         if backend == "reverse_loop":
             x = deconv2d_reverse_loop(x, w, b, l.stride, l.padding)
@@ -144,13 +159,29 @@ def generator_apply(
             x = deconv2d_zero_insertion(x, w, b, l.stride, l.padding)
         elif backend == "pallas":
             from ..kernels.deconv2d import deconv2d
-            x = deconv2d(x, w, b, l.stride, l.padding,
-                         activation=l.activation, **tiles)
+            from ..kernels.deconv2d.ops import suppress_tile_warnings
+            if lp is not None:
+                x = deconv2d(x, w, b, plan=lp)
+            else:
+                # supported legacy override surface: the expansion into
+                # tile kwargs is ours, not the user's — don't warn
+                with suppress_tile_warnings():
+                    x = deconv2d(
+                        x, w, b, l.stride, l.padding,
+                        activation=l.activation,
+                        **_tile_kwargs((tile_overrides or {}).get(i)))
         elif backend == "pallas_sparse":
+            from ..kernels.deconv2d.ops import suppress_tile_warnings
             from ..kernels.deconv2d_sparse import deconv2d_sparse
-            x = deconv2d_sparse(x, w, b, l.stride, l.padding,
-                                activation=l.activation,
-                                plan=(sparse_plans or {}).get(i), **tiles)
+            if lp is not None:
+                x = deconv2d_sparse(x, w, b, plan=lp)
+            else:
+                with suppress_tile_warnings():
+                    x = deconv2d_sparse(
+                        x, w, b, l.stride, l.padding,
+                        activation=l.activation,
+                        plan=(sparse_plans or {}).get(i),
+                        **_tile_kwargs((tile_overrides or {}).get(i)))
         else:
             raise ValueError(backend)
         if not fused:
@@ -166,6 +197,7 @@ def make_fused_generator(
     tiles: Optional[Dict[int, Any]] = None,
     fwd_backend: str = "pallas",
     bwd_backend: str = "reverse_loop",
+    plan=None,
 ):
     """Differentiable generator whose *primal* runs the batch-fused Pallas
     serving kernels and whose *cotangent* runs through the reverse-loop
@@ -179,9 +211,16 @@ def make_fused_generator(
     backward pass rematerializes the reverse-loop forward (one extra
     forward per VJP; nothing from the Pallas residuals is reused).
 
+    ``plan`` is a `repro.plan.NetworkPlan`: the primal's backend and
+    per-layer tiles (incl. ``t_n``) come pinned from it instead of the
+    ``tiles``/``fwd_backend`` pair.
+
     ``pallas_sparse`` is deliberately rejected: its zero-skip schedule is
     compiled against *frozen* weights, which training mutates every step.
     """
+    if plan is not None:
+        fwd_backend = plan.backend
+        tiles = plan.tile_overrides()
     if fwd_backend == "pallas_sparse":
         raise ValueError(
             "pallas_sparse is inference-only: the static zero-skip plan is "
@@ -190,7 +229,7 @@ def make_fused_generator(
     @jax.custom_vjp
     def apply(p, z):
         return generator_apply(p, cfg, z, backend=fwd_backend,
-                               tile_overrides=tiles)
+                               tile_overrides=tiles, plan=plan)
 
     def fwd(p, z):
         return apply(p, z), (p, z)

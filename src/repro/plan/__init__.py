@@ -1,0 +1,17 @@
+"""Plan/execute API: the single way to run deconv work.
+
+Build once (`build_layer_plan` / `build_network_plan`), execute many —
+every kernel wrapper takes a ``plan=`` fast path, `generator_apply` /
+`quantized_generator_apply` / `make_fused_generator` consume a
+`NetworkPlan`, and `serve.DcnnServeEngine.from_config` serves one plan
+per bucket.  Plans serialize to JSON so a deployment pins its compiled
+configuration the way the paper pins a bitstream.
+"""
+from .deconv_plan import (PLAN_SCHEMA_VERSION, DeconvPlan, PlanSchemaError,
+                          build_layer_plan)
+from .network_plan import NetworkPlan, build_network_plan
+
+__all__ = [
+    "PLAN_SCHEMA_VERSION", "DeconvPlan", "PlanSchemaError",
+    "build_layer_plan", "NetworkPlan", "build_network_plan",
+]

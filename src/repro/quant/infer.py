@@ -28,18 +28,34 @@ from .qmath import quantize_symmetric
 def quantized_generator_apply(
     qp: Dict[str, Any],
     cfg: DcnnConfig,
-    qcfg: QuantConfig,
+    qcfg: Optional[QuantConfig],
     z: jax.Array,
     tile_overrides: Optional[Dict[int, Any]] = None,
     interpret: Optional[bool] = None,
+    plan=None,
 ) -> jax.Array:
     """z: (B, z_dim) f32 -> images (B, H, W, C) f32 in [-1, 1].
 
     ``qp`` is the `quant.calibrate.quantize_params` tree (int8 ``w_q``,
     f32 ``b``, f32 per-channel combined ``scale``); ``qcfg`` carries the
-    calibrated activation scales that chain the layers together."""
+    calibrated activation scales that chain the layers together.
+
+    ``plan`` is a `repro.plan.NetworkPlan` at precision="int8": per-layer
+    tiles AND the requant epilogue scales come pinned from it, and
+    ``qcfg`` may be None (the plan carries the calibration)."""
     from ..kernels.deconv2d import deconv2d_int8
 
+    if plan is not None:
+        if plan.precision != "int8":
+            raise ValueError(
+                f"quantized_generator_apply needs an int8 plan, got "
+                f"{plan.precision!r}")
+        plan.validate_for(cfg)
+        if qcfg is None:
+            qcfg = plan.quant_config()
+    if qcfg is None:
+        raise ValueError("quantized_generator_apply needs a QuantConfig "
+                         "(directly or via an int8 plan)")
     if len(qcfg.layers) != len(cfg.layers):
         raise ValueError(
             f"QuantConfig has {len(qcfg.layers)} layers; "
@@ -49,11 +65,20 @@ def quantized_generator_apply(
     x = constrain(x, "batch", None, None, None)
     for i, l in enumerate(cfg.layers):
         lq = qp[f"l{i}"]
-        tiles = _tile_kwargs((tile_overrides or {}).get(i))
-        x = deconv2d_int8(
-            x, lq["w_q"], lq["scale"], lq["b"], l.stride, l.padding,
-            activation=l.activation, out_scale=qcfg.out_scale(i),
-            interpret=interpret, **tiles)
+        if plan is not None:
+            x = deconv2d_int8(x, lq["w_q"], lq["scale"], lq["b"],
+                              plan=plan.layers[i], interpret=interpret)
+        else:
+            from ..kernels.deconv2d.ops import suppress_tile_warnings
+
+            # supported legacy override surface: the tile-kwarg expansion
+            # is ours, not the user's — don't warn
+            with suppress_tile_warnings():
+                x = deconv2d_int8(
+                    x, lq["w_q"], lq["scale"], lq["b"], l.stride,
+                    l.padding, activation=l.activation,
+                    out_scale=qcfg.out_scale(i), interpret=interpret,
+                    **_tile_kwargs((tile_overrides or {}).get(i)))
         x = constrain(x, "batch", None, None, None)
     return x
 

@@ -1,0 +1,9 @@
+"""Serving engines (LM continuous batching + DCNN bucketed plan/execute)."""
+from .config import EngineConfig
+from .engine import (DcnnServeEngine, Request, ServeEngine, pow2_buckets,
+                     shard_aligned_buckets)
+
+__all__ = [
+    "EngineConfig", "DcnnServeEngine", "Request", "ServeEngine",
+    "pow2_buckets", "shard_aligned_buckets",
+]

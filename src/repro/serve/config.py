@@ -1,0 +1,53 @@
+"""Engine configuration for the DCNN serving path.
+
+`EngineConfig` is the one place the serving knobs live — the ~12
+interacting kwargs `DcnnServeEngine.__init__` had accreted (backend,
+precision, calibration, bucketing, mesh, donation, ...) collapsed into a
+frozen dataclass.  Build one, hand it to `DcnnServeEngine.from_config`
+together with the params and (optionally) a pinned `plan.NetworkPlan`;
+the old keyword constructor survives one release as a deprecation shim
+that builds this config internally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Everything a `DcnnServeEngine` needs besides params and plans.
+
+    * ``model``     — the `models.dcnn.DcnnConfig` being served.
+    * ``backend``   — deconv formulation ("pallas", "pallas_sparse",
+                      "reverse_loop", "xla").
+    * ``precision`` — "fp32" or "int8" (the calibrated Pallas chain).
+    * ``quant_cfg`` — pre-computed `quant.QuantConfig`; None self-
+                      calibrates with the ``calib_*`` knobs (or takes the
+                      calibration pinned in a provided NetworkPlan).
+    * ``mesh``/``rules`` — optional jax Mesh + sharding rules: buckets
+                      shard over the data axis, params replicate.
+    * ``buckets``/``max_batch`` — explicit bucket set, or power-of-two
+                      buckets up to ``max_batch``.
+    * ``autotune``/``refine`` — tile resolution policy for plan building.
+    * ``warmup``    — eagerly build + run every bucket at construction.
+    * ``donate``    — donate z buffers to the compiled generator on TPU.
+    * ``call_overhead_rows`` — chunk-planning cost of one extra dispatch.
+    """
+
+    model: Any
+    backend: str = "pallas"
+    precision: str = "fp32"
+    quant_cfg: Any = None
+    mesh: Any = None
+    rules: Any = None
+    autotune: bool = True
+    refine: bool = False
+    max_batch: int = 64
+    buckets: Optional[Tuple[int, ...]] = None
+    warmup: bool = False
+    donate: bool = True
+    call_overhead_rows: int = 8
+    calib_batch: int = 64
+    calib_seed: int = 0
+    calib_strategy: str = "mean_ksigma"

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -26,6 +27,7 @@ import numpy as np
 
 from ..models.dcnn import DcnnConfig, generator_apply
 from ..models.transformer import ModelConfig, apply_lm, init_cache
+from .config import EngineConfig
 from .sampling import sample
 
 
@@ -236,6 +238,12 @@ class DcnnServeEngine:
       cache), and the mesh path replicates the quantized tree exactly
       like fp32 params.
 
+    * **Plan/execute** — every bucket serves a pinned `plan.NetworkPlan`
+      (tiles, epilogues, quant scales, zero-skip schedules resolved ONCE
+      at plan-build time; ``plan_stats`` counts builds and their wall
+      clock).  `from_config` accepts a pre-built/deserialized plan so a
+      deployment executes exactly the configuration it validated.
+
     ``trace_counts`` maps bucket -> number of times its generator was
     traced (== compiled); tests pin the no-per-request-recompilation
     guarantee on it."""
@@ -249,37 +257,96 @@ class DcnnServeEngine:
                  precision: str = "fp32", quant_cfg=None,
                  calib_batch: int = 64, calib_seed: int = 0,
                  calib_strategy: str = "mean_ksigma"):
+        # deprecation shim (one release): the kwarg sprawl folds into an
+        # EngineConfig and routes through the plan-driven setup
+        warnings.warn(
+            "DcnnServeEngine(cfg, params, **kwargs) is deprecated: build a "
+            "serve.EngineConfig and use DcnnServeEngine.from_config(config, "
+            "params, plan=...)", DeprecationWarning, stacklevel=2)
+        config = EngineConfig(
+            model=cfg, backend=backend, precision=precision,
+            quant_cfg=quant_cfg, mesh=mesh, rules=rules, autotune=autotune,
+            refine=refine, max_batch=max_batch,
+            buckets=None if buckets is None else tuple(buckets),
+            warmup=warmup, donate=donate,
+            call_overhead_rows=call_overhead_rows, calib_batch=calib_batch,
+            calib_seed=calib_seed, calib_strategy=calib_strategy)
+        self._setup(config, params, None)
+
+    @classmethod
+    def from_config(cls, cfg: EngineConfig, params, plan=None
+                    ) -> "DcnnServeEngine":
+        """The plan/execute constructor: ``cfg`` is a `serve.EngineConfig`
+        and ``plan`` an optional pinned `plan.NetworkPlan` (e.g. loaded
+        from JSON) for the bucket whose per-device batch matches
+        ``plan.batch`` — remaining buckets plan themselves on first use.
+        An int8 plan also supplies the calibration when ``cfg.quant_cfg``
+        is None, so a pinned deployment never re-calibrates."""
+        self = cls.__new__(cls)
+        self._setup(cfg, params, plan)
+        return self
+
+    def _setup(self, config: EngineConfig, params, plan) -> None:
+        cfg = config.model
+        self.config = config
         self.cfg = cfg
-        self.backend = backend
+        self.backend = config.backend
         # chunk-planning knob: one kernel dispatch is costed like computing
         # this many extra rows (trades padded-row waste against call count)
-        self.call_overhead_rows = call_overhead_rows
-        if precision not in ("fp32", "int8"):
-            raise ValueError(f"unknown precision {precision!r}; "
+        self.call_overhead_rows = config.call_overhead_rows
+        if config.precision not in ("fp32", "int8"):
+            raise ValueError(f"unknown precision {config.precision!r}; "
                              "expected 'fp32' or 'int8'")
-        if precision == "int8" and backend != "pallas":
+        if config.precision == "int8" and config.backend != "pallas":
             raise ValueError(
                 "precision='int8' runs the dense int8 Pallas kernel; "
-                f"backend={backend!r} has no quantized variant")
-        self.precision = precision
-        self.quant_cfg = quant_cfg
-        if precision == "int8":
+                f"backend={config.backend!r} has no quantized variant")
+        self.precision = config.precision
+        self.quant_cfg = config.quant_cfg
+        if plan is not None:
+            if (plan.backend, plan.precision) != (self.backend,
+                                                  self.precision):
+                raise ValueError(
+                    f"plan was built for backend={plan.backend!r} / "
+                    f"precision={plan.precision!r}; the engine config says "
+                    f"{self.backend!r} / {self.precision!r}")
+            plan.validate_for(cfg)
+            # a stale zero-skip schedule (plan pinned, checkpoint since
+            # re-pruned) would silently skip nonzero blocks; params are
+            # still concrete here, so this is the place to catch it
+            plan.verify_sparse_tables(params)
+            if self.precision == "int8":
+                if self.quant_cfg is None:
+                    # serve exactly the calibration the plan pinned
+                    self.quant_cfg = plan.quant_config()
+                elif plan.quant_config() != self.quant_cfg:
+                    # the params would be quantized with one scale set
+                    # while the plan's pinned requant epilogues use
+                    # another — silently wrong images; fail loudly
+                    raise ValueError(
+                        "EngineConfig.quant_cfg and the pinned plan carry "
+                        "different calibrations; drop one of them (the "
+                        "plan's scales are authoritative for its "
+                        "executables)")
+        if self.precision == "int8":
             from ..quant.calibrate import calibrate, quantize_params
             if self.quant_cfg is None:
                 # self-calibrate on the serving input distribution
                 # (z ~ N(0, 1)): a fixed-seed batch through the fp32
                 # reference chain, observed by the chosen strategy
                 z_cal = jax.random.normal(
-                    jax.random.PRNGKey(calib_seed),
-                    (calib_batch, cfg.z_dim), jnp.float32)
+                    jax.random.PRNGKey(config.calib_seed),
+                    (config.calib_batch, cfg.z_dim), jnp.float32)
                 self.quant_cfg = calibrate(params, cfg, z_cal,
-                                           strategy=calib_strategy)
+                                           strategy=config.calib_strategy)
             params = quantize_params(params, cfg, self.quant_cfg)
+        mesh = config.mesh
         self.mesh = mesh
         if mesh is not None:
             from ..dist.sharding import (data_axis_size, make_rules,
                                          replicated_specs, tree_shardings)
-            self.rules = rules if rules is not None else make_rules("tp")
+            self.rules = (config.rules if config.rules is not None
+                          else make_rules("tp"))
             self.n_devices = data_axis_size(mesh, self.rules)
             # params live replicated on the mesh from the start: steady-state
             # serving never re-transfers them per call
@@ -287,21 +354,23 @@ class DcnnServeEngine:
                 mesh, self.rules, params, replicated_specs(params))
             params = jax.device_put(params, self._param_shardings)
         else:
-            self.rules = rules
+            self.rules = config.rules
             self.n_devices = 1
             self._param_shardings = None
         self.params = params
         self.buckets = shard_aligned_buckets(
-            buckets if buckets else pow2_buckets(max_batch), self.n_devices)
+            config.buckets if config.buckets else
+            pow2_buckets(config.max_batch), self.n_devices)
         if self.buckets[0] < 1:
             raise ValueError(f"buckets must be positive: {self.buckets}")
         self.max_bucket = self.buckets[-1]
-        self._autotune = autotune
-        self._refine = refine
+        self._autotune = config.autotune
+        self._refine = config.refine
         # donation is a TPU win (steady-state z buffers are reused); on CPU
         # jax warns that donation is unimplemented, so gate on the backend
-        self._donate = donate and jax.default_backend() == "tpu"
+        self._donate = config.donate and jax.default_backend() == "tpu"
         self._fns: Dict[int, Callable] = {}
+        self.plans: Dict[int, object] = {}
         self.tile_choices: Dict[int, Optional[dict]] = {}
         self.trace_counts: Dict[int, int] = {}
         self._sparse_plan_memo: Dict[tuple, tuple] = {}
@@ -310,10 +379,23 @@ class DcnnServeEngine:
         self._next_id = 0
         self.stats = {"generate_calls": 0, "images": 0, "padded_images": 0,
                       "device_count": self.n_devices}
+        # plan-build observability: serving must pay planning once per
+        # bucket, never per call (bench pins this)
+        self.plan_stats = {"builds": 0, "build_seconds": 0.0}
+        if plan is not None:
+            seeded = [b for b in self.buckets
+                      if self.shard_batch(b) == plan.batch]
+            if not seeded:
+                raise ValueError(
+                    f"plan.batch={plan.batch} matches no bucket's "
+                    f"per-device batch (buckets={self.buckets}, "
+                    f"{self.n_devices} devices)")
+            for b in seeded:
+                self.plans[b] = plan
         # per-bucket serving observability: wall-clock + image counters so
         # the engine *learns* throughput (global and per-device) per bucket
         self.bucket_stats: Dict[int, Dict[str, float]] = {}
-        if warmup:
+        if config.warmup:
             for b in self.buckets:
                 self._warmup_bucket(b)
 
@@ -324,52 +406,46 @@ class DcnnServeEngine:
         global bucket."""
         return bucket // self.n_devices
 
-    def _tiles_for(self, bucket: int) -> Optional[dict]:
-        from ..kernels.autotune import network_tiles
+    def _plan_for(self, bucket: int):
+        """The bucket's pinned `NetworkPlan`, built on first use.
 
-        # the autotuner ranks against the precision actually served: int8
-        # quarters the modeled traffic and doubles the modeled MXU peak,
-        # and the dtype is part of the (v3) cache key
-        dtype = jnp.int8 if self.precision == "int8" else self.cfg.jdtype
-        return network_tiles(self.cfg, dtype, backend=self.backend,
-                             batch=self.shard_batch(bucket),
-                             refine=self._refine, autotune=self._autotune)
+        Planning — autotune cache interaction, quant-scale wiring,
+        zero-skip schedule construction (memoized across buckets sharing
+        channel tiles) — happens exactly once per bucket; `generate`
+        executes the pinned plan with zero per-call re-planning."""
+        if bucket not in self.plans:
+            from ..plan import build_network_plan
 
-    def _sparse_plans_for(self, tiles: dict) -> Optional[dict]:
-        if self.backend != "pallas_sparse":
-            return None
-        from ..kernels.deconv2d_sparse import make_sparse_plan
-
-        # the zero-skip schedule depends only on (layer, t_ci, t_co) — NOT
-        # on the bucket — so buckets sharing channel tiles share the plan
-        plans = {}
-        for i, l in enumerate(self.cfg.layers):
-            key = (i, tiles[i].t_ci, tiles[i].t_co)
-            if key not in self._sparse_plan_memo:
-                self._sparse_plan_memo[key] = make_sparse_plan(
-                    np.asarray(self.params[f"l{i}"]["w"]), l.stride,
-                    l.padding, tiles[i].t_ci, tiles[i].t_co)
-            plans[i] = self._sparse_plan_memo[key]
-        return plans
+            t0 = time.perf_counter()
+            self.plans[bucket] = build_network_plan(
+                self.cfg,
+                batch=self.shard_batch(bucket),
+                backend=self.backend,
+                precision=self.precision,
+                params=self.params,
+                quant_cfg=self.quant_cfg,
+                autotune=self._autotune,
+                refine=self._refine,
+                sparse_table_cache=self._sparse_plan_memo,
+            )
+            self.plan_stats["builds"] += 1
+            self.plan_stats["build_seconds"] += time.perf_counter() - t0
+        return self.plans[bucket]
 
     def _get_fn(self, bucket: int) -> Callable:
         if bucket not in self._fns:
-            tiles = self._tiles_for(bucket)
-            plans = self._sparse_plans_for(tiles) if tiles else None
-            self.tile_choices[bucket] = tiles
+            plan = self._plan_for(bucket)
+            self.tile_choices[bucket] = plan.tile_overrides()
 
             if self.precision == "int8":
                 from ..quant.infer import quantized_generator_apply
 
-                def apply(p, z, _tiles=tiles):
+                def apply(p, z, _plan=plan):
                     return quantized_generator_apply(
-                        p, self.cfg, self.quant_cfg, z, tile_overrides=_tiles)
+                        p, self.cfg, self.quant_cfg, z, plan=_plan)
             else:
-                def apply(p, z, _tiles=tiles, _plans=plans):
-                    return generator_apply(p, self.cfg, z,
-                                           backend=self.backend,
-                                           tile_overrides=_tiles,
-                                           sparse_plans=_plans)
+                def apply(p, z, _plan=plan):
+                    return generator_apply(p, self.cfg, z, plan=_plan)
 
             if self.mesh is not None:
                 # SPMD: every device runs the same per-shard executable on

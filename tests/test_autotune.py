@@ -175,30 +175,60 @@ def test_stale_v1_schema_entry_not_served(tmp_cache):
                              "t_n": 1}
 
 
-def test_v2_schema_keys_dropped_on_load(tmp_cache):
-    """Satellite: v3 made the ranking dtype-aware, so v2 entries — ranked
-    with the device's native byte width regardless of the requested dtype
-    — are stale even when their value shape is valid.  Every key from a
-    different schema version is dropped on load, and the next store
-    persists a clean v3-only file."""
+def test_v3_schema_keys_dropped_on_load(tmp_cache):
+    """Satellite: v4 derives keys from `DeconvPlan.stable_hash` instead of
+    the v3 hand-assembled tuple string, so a v3 key — whose format could
+    silently omit a new ranking input — is stale even when its value shape
+    is valid.  Every key from a different schema version is dropped on
+    load, and the next store persists a clean v4-only file."""
     import json
 
     from repro.kernels.autotune import _CACHE_VERSION, cache_key
 
-    assert _CACHE_VERSION == 3
-    key3 = cache_key(MNIST_L2, jnp.float32, "pallas")
-    assert key3.startswith("v3|")
-    key2 = "v2|" + key3.split("|", 1)[1]
+    assert _CACHE_VERSION == 4
+    key4 = cache_key(MNIST_L2, jnp.float32, "pallas")
+    assert key4.startswith("v4|")
+    # a v3-era key: hand-assembled readable tuple under the old version
+    key3 = ("v3|cpu|tpu-v5e|pallas|float32|n1|i7x7|c256>128|k4s2p1")
     entry = {"t_oh": 2, "t_ow": 2, "t_ci": 8, "t_co": 8, "t_n": 1,
              "source": "timed", "attainable_ops": 1.0, "vmem_bytes": 1}
-    tmp_cache.write_text(json.dumps({key2: entry}))
+    tmp_cache.write_text(json.dumps({key3: entry}))
     c = choose_tiles(MNIST_L2, jnp.float32, backend="pallas")
     assert c.source != "cache"
     assert c.as_kwargs() != {"t_oh": 2, "t_ow": 2, "t_ci": 8, "t_co": 8,
                              "t_n": 1}
     blob = json.loads(tmp_cache.read_text())
-    assert key2 not in blob            # stale schema purged on re-store
-    assert key3 in blob
+    assert key3 not in blob            # stale schema purged on re-store
+    assert key4 in blob
+
+
+def test_v4_cache_key_is_plan_hash(tmp_cache):
+    """The v4 key is derived from the plan's tile-scope stable hash: the
+    same request hashes identically through either entry point, and every
+    tile-relevant planning input (dtype, batch, backend, epilogue output
+    width) produces a distinct key."""
+    from repro.kernels.autotune import cache_key, plan_cache_key
+    from repro.plan import DeconvPlan
+
+    plan = DeconvPlan(geometry=MNIST_L2, batch=8, dtype="float32",
+                      backend="pallas")
+    key = cache_key(MNIST_L2, jnp.float32, "pallas", batch=8)
+    assert key == plan_cache_key(plan)
+    assert plan.stable_hash(scope="tiles") in key
+    # a resolved plan keys identically to the bare request (the tiles are
+    # the cached payload, not part of the key)
+    resolved = choose_tiles(MNIST_L2, jnp.float32, backend="pallas", batch=8)
+    import dataclasses
+    assert plan_cache_key(dataclasses.replace(plan, tiles=resolved)) == key
+    variants = [
+        cache_key(MNIST_L2, jnp.int8, "pallas", batch=8),
+        cache_key(MNIST_L2, jnp.float32, "pallas_sparse", batch=8),
+        cache_key(MNIST_L2, jnp.float32, "pallas", batch=64),
+        cache_key(MNIST_L2, jnp.float32, "pallas", batch=8,
+                  out_dtype_bytes=4),
+        cache_key(CELEBA_L2, jnp.float32, "pallas", batch=8),
+    ]
+    assert len(set(variants + [key])) == len(variants) + 1
 
 
 def test_int8_dtype_distinct_cache_key(tmp_cache):
