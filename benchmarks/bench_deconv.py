@@ -494,9 +494,135 @@ def print_sharded(row):
           f"parity_err={row['parity_max_err']:.2e} img/s per bucket={tput}")
 
 
+def degraded_rows(devices: int = 8, keep: int = 4, stream=(5, 8, 19),
+                  reps: int = 3):
+    """Degraded-mode serving: throughput before / after losing half the
+    mesh, and the cost of the elastic recovery itself.
+
+    Same subprocess pattern as `sharded_rows` (the XLA device-count flag
+    must precede jax init).  Phases: warm the full mesh and stream
+    `reps` rounds for the pre-loss throughput/CV, then arm a DeviceLoss
+    at the next dispatch and time the request that rides through the
+    remesh (re-bucket, re-plan, re-shard), then stream again on the
+    survivors for the post-loss numbers.  Plan hashes across the remesh
+    come from the engine's own remesh event — on CPU interpret mode the
+    absolute img/s is a dispatch proxy, but the pre/post ratio and the
+    recovery split (remesh vs first-request) carry over."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    import repro
+
+    src_dir = os.path.dirname(os.path.dirname(
+        os.path.abspath(repro.__file__)))
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={devices}")
+        os.environ["JAX_PLATFORMS"] = "cpu"
+        import json
+        import time
+        import jax
+        import numpy as np
+        from repro.dist.inject import DeviceLoss, FaultInjector
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models.dcnn import MNIST_DCNN, generator_init
+        from repro.serve import DcnnServeEngine, EngineConfig
+
+        params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+        inj = FaultInjector()
+        eng = DcnnServeEngine.from_config(
+            EngineConfig(model=MNIST_DCNN, backend="pallas",
+                         mesh=make_serving_mesh(),
+                         buckets=(1, 2, 4, 8, 16), warmup=True),
+            params, fault_injector=inj)
+        rng = np.random.RandomState(0)
+        stream = {tuple(stream)}
+        zs = [rng.randn(n, MNIST_DCNN.z_dim).astype(np.float32)
+              for n in stream]
+
+        def run_stream(reps):
+            t0 = time.perf_counter()
+            imgs = 0
+            for _ in range(reps):
+                for z in zs:
+                    eng.collect(eng.submit(z))
+                    imgs += z.shape[0]
+            return imgs / (time.perf_counter() - t0)
+
+        buckets_before = list(eng.buckets)
+        pre_img_s = run_stream({reps})
+        pre = {{str(k): v for k, v in eng.throughput().items()}}
+        eng.bucket_stats.clear()
+
+        # arm the loss for the very next dispatch; the request that
+        # triggers it pays the full recovery (remesh + re-plan + re-run)
+        inj.schedule(DeviceLoss(at_call=inj.calls, keep={keep}))
+        t0 = time.perf_counter()
+        eng.collect(eng.submit(zs[0]))
+        recovery_s = time.perf_counter() - t0
+        ev = eng.fault_stats["remesh_events"][0]
+
+        eng.bucket_stats.clear()
+        post_img_s = run_stream({reps})
+        post = {{str(k): v for k, v in eng.throughput().items()}}
+        print(json.dumps({{
+            "devices_before": ev["devices_before"],
+            "devices_after": ev["devices_after"],
+            "buckets_before": buckets_before,
+            "buckets_after": list(eng.buckets),
+            "stream": list(stream), "reps": {reps},
+            "pre_loss_img_s": pre_img_s,
+            "post_loss_img_s": post_img_s,
+            "pre_loss_buckets": pre,
+            "post_loss_buckets": post,
+            "recovery_s": recovery_s,
+            "remesh_s": ev["seconds"],
+            "plan_hash_matches": ev["plan_hash_matches"],
+            "retries": eng.fault_stats["retries"],
+        }}))
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=1800,
+        env={**os.environ, "PYTHONPATH": src_dir},
+    )
+    if proc.returncode != 0:
+        return {"error": proc.stderr[-2000:]}
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def print_degraded(row):
+    if not row:
+        return
+    print("# degraded-mode serving: elastic recovery after losing half the "
+          "mesh (forced host devices; img/s is a dispatch proxy)")
+    if "error" in row:
+        print(f"degraded bench failed:\n{row['error']}")
+        return
+    matches = row["plan_hash_matches"]
+    print(f"devices {row['devices_before']} -> {row['devices_after']}  "
+          f"buckets {row['buckets_before']} -> {row['buckets_after']}")
+    print(f"pre-loss {row['pre_loss_img_s']:.1f} img/s  "
+          f"post-loss {row['post_loss_img_s']:.1f} img/s "
+          f"({row['post_loss_img_s'] / row['pre_loss_img_s']:.2f}x)  "
+          f"recovery {row['recovery_s'] * 1e3:.0f} ms "
+          f"(remesh {row['remesh_s'] * 1e3:.0f} ms)")
+    print(f"plan hashes re-derived identically for shared per-device "
+          f"batches: {matches} "
+          f"({'all match' if all(matches.values()) else 'MISMATCH'})")
+    for label, key in (("pre", "pre_loss_buckets"),
+                       ("post", "post_loss_buckets")):
+        tput = {k: f"{v['img_per_s']:.1f} (cv {v.get('cv', 0):.3f})"
+                for k, v in row[key].items()}
+        print(f"  {label}-loss per bucket img/s: {tput}")
+
+
 def write_json(path: str, table2, traffic, autotune, scaling,
                batch_sweep=None, serving=None, sharded=None, quant=None,
-               plan=None):
+               plan=None, degraded=None):
     with open(path, "w") as f:
         json.dump({"table2": table2, "traffic": traffic,
                    "autotune": autotune, "scaling": scaling,
@@ -504,7 +630,8 @@ def write_json(path: str, table2, traffic, autotune, scaling,
                    "serving": serving or {},
                    "sharded": sharded or {},
                    "quant": quant or [],
-                   "plan": plan or []},
+                   "plan": plan or [],
+                   "degraded": degraded or {}},
                   f, indent=1, default=float)
     print(f"[bench_deconv] wrote {path}")
 
@@ -581,6 +708,7 @@ def main(reps: int = 50, smoke: bool = False,
         b_rows = batch_sweep_rows(batches=(8, 64), reps=3)
         serving = serving_sweep_rows(reps=1)
         sharded = sharded_rows(devices=8, stream=(5, 8))
+        degraded = degraded_rows(devices=8, keep=4, stream=(5, 8), reps=1)
         q_rows = quant_rows(batch=64, mmd_n=16, calib_n=32)
         p_rows = plan_rows(batch=64)
         print_traffic(t_rows)
@@ -595,11 +723,13 @@ def main(reps: int = 50, smoke: bool = False,
         print()
         print_sharded(sharded)
         print()
+        print_degraded(degraded)
+        print()
         print_quant(q_rows)
         print()
         print_plan_rows(p_rows)
         write_json(json_path, [], t_rows, a_rows, s_rows, b_rows, serving,
-                   sharded, q_rows, p_rows)
+                   sharded, q_rows, p_rows, degraded)
         return []
     rows = run(reps)
     print("# Table II analogue: GOps/s mean (cv) per layer; cv = run-to-run "
@@ -635,13 +765,16 @@ def main(reps: int = 50, smoke: bool = False,
     sharded = sharded_rows(devices=8)
     print_sharded(sharded)
     print()
+    degraded = degraded_rows(devices=8, keep=4)
+    print_degraded(degraded)
+    print()
     q_rows = quant_rows(batch=64, mmd_n=32, calib_n=64)
     print_quant(q_rows)
     print()
     p_rows = plan_rows(batch=64)
     print_plan_rows(p_rows)
     write_json(json_path, rows, t_rows, a_rows, s_rows, b_rows, serving,
-               sharded, q_rows, p_rows)
+               sharded, q_rows, p_rows, degraded)
     return rows
 
 

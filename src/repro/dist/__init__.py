@@ -8,11 +8,17 @@ rules (`make_rules`).  Outside a context every annotation is a no-op, so
 the same model runs unchanged on one device.
 """
 from .context import constrain, current, sharding_context
+from .fault import Heartbeat, StragglerMonitor, elastic_mesh, reshard_tree
+from .inject import (DeviceLoss, DeviceLossError, FaultError, FaultInjector,
+                     SlowCall, TransientCallError, TransientFailure)
 from .sharding import (batch_pspec, cache_specs, make_rules, spec_to_pspec,
                        tree_shardings)
 
 __all__ = [
     "constrain", "current", "sharding_context",
+    "Heartbeat", "StragglerMonitor", "elastic_mesh", "reshard_tree",
+    "DeviceLoss", "DeviceLossError", "FaultError", "FaultInjector",
+    "SlowCall", "TransientCallError", "TransientFailure",
     "batch_pspec", "cache_specs", "make_rules", "spec_to_pspec",
     "tree_shardings",
 ]

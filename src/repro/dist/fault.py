@@ -22,7 +22,10 @@ class StragglerMonitor:
 
     A step slower than ``factor`` x the EMA is flagged; flagged steps do NOT
     update the EMA (a straggler must not poison the baseline it is judged
-    against).  The first ``warmup_steps`` observations only seed the EMA.
+    against).  The first ``warmup_steps`` observations only seed the EMA —
+    all of them, with their running mean, so one noisy first call does not
+    become the baseline every later call is judged against — and are never
+    flagged themselves.
     """
 
     def __init__(self, factor: float = 3.0, warmup_steps: int = 2,
@@ -33,13 +36,19 @@ class StragglerMonitor:
         self.ema: Optional[float] = None
         self.flagged: List[int] = []
         self._n = 0
+        self._warmup_sum = 0.0
+        self._warmup_n = 0
 
     def observe(self, step: int, dt: float) -> bool:
         self._n += 1
-        if self.ema is None:
-            self.ema = dt
+        if self._n <= self.warmup_steps or self.ema is None:
+            # warmup (or warmup_steps=0 needing a first seed): every
+            # observation contributes to the seed mean
+            self._warmup_sum += dt
+            self._warmup_n += 1
+            self.ema = self._warmup_sum / self._warmup_n
             return False
-        if self._n > self.warmup_steps and dt > self.factor * self.ema:
+        if dt > self.factor * self.ema:
             self.flagged.append(step)
             return True
         self.ema = self.decay * self.ema + (1.0 - self.decay) * dt
@@ -47,17 +56,35 @@ class StragglerMonitor:
 
 
 class Heartbeat:
-    """Fires ``on_failure`` once when no tick arrives within ``timeout_s``.
+    """Fires ``on_failure`` once per silence: no tick within ``timeout_s``
+    while armed.
 
     A daemon thread polls the last-tick timestamp; `tick()` is the only
     thing the (possibly blocked) training loop must call.  `close()` stops
     the watcher; it never fires after close.
+
+    Thread-safety: `tick()` and the watcher race on the fired/last pair
+    (a tick landing between the watcher's check and its set used to
+    double-fire or eat the reset), so both run under one lock — the
+    check-and-set is atomic.  ``on_failure`` runs OUTSIDE the lock (it
+    may call `tick` or `close` itself) and an exception it raises is
+    recorded in ``callback_errors`` instead of silently killing the
+    watcher thread; ``fire_count`` counts every fire.
+
+    `arm()`/`disarm()` gate the watcher for callers whose liveness signal
+    is intermittent: a serving engine arms around each dispatched call so
+    an idle queue is not a "failure".  Constructed armed (the training
+    driver's always-on usage).
     """
 
     def __init__(self, timeout_s: float, on_failure: Callable[[], None],
                  poll_s: Optional[float] = None):
         self.timeout_s = timeout_s
         self.on_failure = on_failure
+        self.callback_errors: List[BaseException] = []
+        self.fire_count = 0
+        self._lock = threading.Lock()
+        self._armed = True
         self._last = time.monotonic()
         self._fired = False
         self._stop = threading.Event()
@@ -66,15 +93,36 @@ class Heartbeat:
         self._thread.start()
 
     def tick(self) -> None:
-        self._last = time.monotonic()
-        self._fired = False
+        with self._lock:
+            self._last = time.monotonic()
+            self._fired = False
+
+    def arm(self) -> None:
+        """Start watching (fresh silence window from now)."""
+        with self._lock:
+            self._armed = True
+            self._last = time.monotonic()
+            self._fired = False
+
+    def disarm(self) -> None:
+        """Stop watching until the next `arm()` (idle is not a failure)."""
+        with self._lock:
+            self._armed = False
 
     def _watch(self) -> None:
         while not self._stop.is_set():
-            if (not self._fired
-                    and time.monotonic() - self._last > self.timeout_s):
-                self._fired = True
-                self.on_failure()
+            fire = False
+            with self._lock:
+                if (self._armed and not self._fired
+                        and time.monotonic() - self._last > self.timeout_s):
+                    self._fired = True
+                    fire = True
+            if fire:
+                self.fire_count += 1
+                try:
+                    self.on_failure()
+                except Exception as e:
+                    self.callback_errors.append(e)
             self._stop.wait(self._poll)
 
     def close(self) -> None:

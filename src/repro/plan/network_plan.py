@@ -310,6 +310,29 @@ def build_network_plan(
     )
 
 
+def executable_fingerprints(plans) -> Dict[int, str]:
+    """{per-device batch -> stable hash} over a collection of
+    `NetworkPlan`s — the "same executable everywhere" check.
+
+    Two plans that agree on the per-device batch must agree on the hash:
+    one mesh's bucket-16 at 8 devices is another's bucket-8 at 4, and a
+    deployment that cannot prove that identity is running an executable
+    nobody validated.  The elastic serving engine records these before
+    and after a device-loss remesh and asserts the overlap matches;
+    multi-host deployments can compare the fingerprints of the plan
+    JSONs each host pinned.  Raises on an internal conflict (two plans
+    for the same per-device batch that disagree)."""
+    out: Dict[int, str] = {}
+    for p in plans:
+        h = p.stable_hash()
+        prev = out.setdefault(p.batch, h)
+        if prev != h:
+            raise ValueError(
+                f"two plans for per-device batch {p.batch} disagree: "
+                f"{prev} vs {h}")
+    return out
+
+
 def timed_build(fn, *args, **kwargs):
     """(result, seconds) helper for plan-build cost accounting."""
     t0 = time.perf_counter()

@@ -1,9 +1,12 @@
-"""Serving engines (LM continuous batching + DCNN bucketed plan/execute)."""
+"""Serving engines (LM continuous batching + DCNN bucketed plan/execute,
+with typed fault/deadline semantics)."""
 from .config import EngineConfig
 from .engine import (DcnnServeEngine, Request, ServeEngine, pow2_buckets,
                      shard_aligned_buckets)
+from .errors import DeadlineExceeded, EngineDegraded, EngineError
 
 __all__ = [
     "EngineConfig", "DcnnServeEngine", "Request", "ServeEngine",
     "pow2_buckets", "shard_aligned_buckets",
+    "DeadlineExceeded", "EngineDegraded", "EngineError",
 ]

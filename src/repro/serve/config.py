@@ -33,6 +33,25 @@ class EngineConfig:
     * ``warmup``    — eagerly build + run every bucket at construction.
     * ``donate``    — donate z buffers to the compiled generator on TPU.
     * ``call_overhead_rows`` — chunk-planning cost of one extra dispatch.
+
+    Fault-tolerance knobs (`serve.errors` / `dist.fault` semantics):
+
+    * ``max_retries``/``retry_backoff_s`` — bounded retry with
+      exponential backoff for transient bucket-call failures; exhausted
+      retries raise `EngineDegraded` instead of looping.
+    * ``heartbeat_timeout_s`` — when set, a `dist.fault.Heartbeat` is
+      armed around every dispatched call: a call silent longer than this
+      is recorded as a stall in ``fault_stats`` (None: no watcher
+      thread).
+    * ``straggler_factor``/``straggler_warmup`` — per-bucket
+      `StragglerMonitor` over the steady-state per-call wall clock (the
+      same samples `throughput()` reports); flagged calls count into
+      ``fault_stats["stragglers"]``.
+    * ``default_deadline_s`` — queue deadline applied to `submit` when
+      the caller gives none; an expired ticket fails typed
+      (`DeadlineExceeded`) instead of executing stale work.
+    * ``elastic`` — on a detected device loss, remesh onto the
+      survivors, re-align buckets and re-plan (False: fail degraded).
     """
 
     model: Any
@@ -51,3 +70,10 @@ class EngineConfig:
     calib_batch: int = 64
     calib_seed: int = 0
     calib_strategy: str = "mean_ksigma"
+    max_retries: int = 2
+    retry_backoff_s: float = 0.05
+    heartbeat_timeout_s: Optional[float] = None
+    straggler_factor: float = 3.0
+    straggler_warmup: int = 3
+    default_deadline_s: Optional[float] = None
+    elastic: bool = True

@@ -25,9 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..dist.fault import Heartbeat, StragglerMonitor
+from ..dist.inject import DeviceLossError, TransientCallError
 from ..models.dcnn import DcnnConfig, generator_apply
 from ..models.transformer import ModelConfig, apply_lm, init_cache
 from .config import EngineConfig
+from .errors import DeadlineExceeded, EngineDegraded
 from .sampling import sample
 
 
@@ -244,6 +247,25 @@ class DcnnServeEngine:
       clock).  `from_config` accepts a pre-built/deserialized plan so a
       deployment executes exactly the configuration it validated.
 
+    * **Fault tolerance** — every bucket dispatch runs guarded: an
+      optional `dist.inject.FaultInjector` hook fires scripted faults, a
+      transient call failure retries with bounded exponential backoff
+      (then fails typed as `EngineDegraded`), an optional
+      `dist.fault.Heartbeat` armed around the call records stalls, and a
+      per-bucket `StragglerMonitor` flags steady-state calls slower than
+      ``straggler_factor`` x their EMA.  A detected **device loss**
+      triggers elastic recovery (`_remesh`): shrink onto the surviving
+      prefix via `dist.fault.elastic_mesh`, re-align buckets to the new
+      device count, `reshard_tree` the replicated params, re-plan every
+      bucket (autotune cache hits via plan hashes keep this fast) and
+      ASSERT via `plan.executable_fingerprints` that every per-device
+      batch re-derived the validated plan hash — then re-run the
+      interrupted chunk and keep serving.  `submit` takes a per-request
+      deadline; an expired ticket fails typed (`DeadlineExceeded`) at
+      drain instead of executing stale work, and a drain whose
+      generate() fails restores every ticket to the queue.  All of it is
+      observable through ``fault_stats``.
+
     ``trace_counts`` maps bucket -> number of times its generator was
     traced (== compiled); tests pin the no-per-request-recompilation
     guarantee on it."""
@@ -274,19 +296,23 @@ class DcnnServeEngine:
         self._setup(config, params, None)
 
     @classmethod
-    def from_config(cls, cfg: EngineConfig, params, plan=None
-                    ) -> "DcnnServeEngine":
+    def from_config(cls, cfg: EngineConfig, params, plan=None,
+                    fault_injector=None) -> "DcnnServeEngine":
         """The plan/execute constructor: ``cfg`` is a `serve.EngineConfig`
         and ``plan`` an optional pinned `plan.NetworkPlan` (e.g. loaded
         from JSON) for the bucket whose per-device batch matches
         ``plan.batch`` — remaining buckets plan themselves on first use.
         An int8 plan also supplies the calibration when ``cfg.quant_cfg``
-        is None, so a pinned deployment never re-calibrates."""
+        is None, so a pinned deployment never re-calibrates.
+        ``fault_injector`` is an optional `dist.inject.FaultInjector`
+        hooked before every bucket dispatch (deterministic fault drills;
+        never needed in production)."""
         self = cls.__new__(cls)
-        self._setup(cfg, params, plan)
+        self._setup(cfg, params, plan, fault_injector)
         return self
 
-    def _setup(self, config: EngineConfig, params, plan) -> None:
+    def _setup(self, config: EngineConfig, params, plan,
+               fault_injector=None) -> None:
         cfg = config.model
         self.config = config
         self.cfg = cfg
@@ -374,11 +400,29 @@ class DcnnServeEngine:
         self.tile_choices: Dict[int, Optional[dict]] = {}
         self.trace_counts: Dict[int, int] = {}
         self._sparse_plan_memo: Dict[tuple, tuple] = {}
-        self._pending: List[Tuple[int, np.ndarray]] = []
+        # queue entries are (ticket, rows, absolute deadline or None)
+        self._pending: List[Tuple[int, np.ndarray, Optional[float]]] = []
         self._results: Dict[int, np.ndarray] = {}
+        self._failures: Dict[int, Exception] = {}
         self._next_id = 0
         self.stats = {"generate_calls": 0, "images": 0, "padded_images": 0,
                       "device_count": self.n_devices}
+        # fault-tolerance machinery: injector hook, per-bucket straggler
+        # monitors over the steady-state call timings, optional stall
+        # heartbeat, and the observable event counters the bench reports
+        self.fault_injector = fault_injector
+        self._stragglers: Dict[int, StragglerMonitor] = {}
+        self._dispatches = 0
+        self.fault_stats = {
+            "retries": 0, "transient_failures": 0, "stragglers": 0,
+            "heartbeat_fires": 0, "deadline_expired": 0,
+            "remesh_events": [],
+        }
+        self._heartbeat = None
+        if config.heartbeat_timeout_s is not None:
+            self._heartbeat = Heartbeat(config.heartbeat_timeout_s,
+                                        self._on_stall)
+            self._heartbeat.disarm()   # armed per dispatched call only
         # plan-build observability: serving must pay planning once per
         # bucket, never per call (bench pins this)
         self.plan_stats = {"builds": 0, "build_seconds": 0.0}
@@ -487,6 +531,132 @@ class DcnnServeEngine:
         z = jnp.zeros((bucket, self.cfg.z_dim), self.cfg.jdtype)
         jax.block_until_ready(fn(self.params, z))
 
+    # -- guarded dispatch + elastic recovery ---------------------------
+    def _on_stall(self) -> None:
+        # heartbeat callback: a dispatched call has been silent past the
+        # configured timeout.  Record it (the Heartbeat catches callback
+        # errors, but there is nothing to raise into — the stalled call
+        # owns the thread).
+        self.fault_stats["heartbeat_fires"] += 1
+
+    def close(self) -> None:
+        """Release the stall-watcher thread (no-op without a heartbeat)."""
+        if self._heartbeat is not None:
+            self._heartbeat.close()
+
+    def _dispatch(self, bucket: int, chunk: np.ndarray):
+        """One guarded bucket dispatch: injector hook, heartbeat armed
+        around the call, bounded retry-with-backoff on transient
+        failures, straggler detection on the steady-state wall clock.
+
+        Returns ``(images, seconds, steady)`` where ``steady`` means the
+        call did not trace (compile) — only steady samples feed the
+        timing stats and the straggler EMA.  `TransientCallError` is
+        retried up to ``max_retries`` times then raised as
+        `EngineDegraded`; `DeviceLossError` escapes to `generate`, which
+        remeshes."""
+        fn = self._get_fn(bucket)
+        attempts = self.config.max_retries + 1
+        for attempt in range(attempts):
+            if self._heartbeat is not None:
+                self._heartbeat.arm()
+            try:
+                traces_before = self.trace_counts.get(bucket, 0)
+                # the injector hook sits inside the timed window: an
+                # injected SlowCall is a slow *dispatch*, visible to the
+                # straggler monitor exactly like a real one
+                t0 = time.perf_counter()
+                if self.fault_injector is not None:
+                    self.fault_injector.before_call(bucket)
+                y = np.asarray(fn(self.params, jnp.asarray(chunk)))
+                dt = time.perf_counter() - t0
+            except TransientCallError as e:
+                self.fault_stats["transient_failures"] += 1
+                if attempt + 1 >= attempts:
+                    raise EngineDegraded(
+                        f"bucket-{bucket} call failed {attempts} "
+                        "time(s); retries exhausted") from e
+                self.fault_stats["retries"] += 1
+                time.sleep(self.config.retry_backoff_s * (2 ** attempt))
+                continue
+            finally:
+                if self._heartbeat is not None:
+                    self._heartbeat.disarm()
+            self._dispatches += 1
+            steady = self.trace_counts.get(bucket, 0) == traces_before
+            if steady:
+                mon = self._stragglers.setdefault(
+                    bucket, StragglerMonitor(
+                        factor=self.config.straggler_factor,
+                        warmup_steps=self.config.straggler_warmup))
+                if mon.observe(self._dispatches, dt):
+                    self.fault_stats["stragglers"] += 1
+            return y, dt, steady
+
+    def _remesh(self, keep: int) -> None:
+        """Elastic recovery from device loss: shrink onto the surviving
+        ``keep``-device prefix, re-align the bucket set to the new
+        device count, reshard the (replicated) params, and re-plan every
+        bucket — recording `plan.executable_fingerprints` before/after
+        so "same plan for the same per-device batch" is ASSERTED, not
+        assumed.  A hash mismatch means the rebuilt executables are not
+        the ones that were validated, and the engine refuses to serve
+        them."""
+        if self.mesh is None or not self.config.elastic:
+            raise EngineDegraded(
+                "device loss without an elastic mesh: nothing to shrink "
+                "onto (serve with mesh=... and elastic=True)")
+        from ..dist.fault import elastic_mesh, reshard_tree
+        from ..dist.sharding import (data_axis_size, replicated_specs,
+                                     tree_shardings)
+        from ..plan import executable_fingerprints
+
+        t0 = time.perf_counter()
+        devs = list(self.mesh.devices.flat)
+        if not 1 <= keep <= len(devs):
+            raise EngineDegraded(
+                f"cannot remesh: {keep} survivor(s) of {len(devs)} "
+                "device(s)")
+        before = executable_fingerprints(self.plans.values())
+        devices_before = self.n_devices
+        self.mesh = elastic_mesh(
+            devs[:keep], model_parallel=self.mesh.shape.get("model", 1))
+        self.n_devices = data_axis_size(self.mesh, self.rules)
+        self._param_shardings = tree_shardings(
+            self.mesh, self.rules, self.params,
+            replicated_specs(self.params))
+        self.params = reshard_tree(self.params, self._param_shardings)
+        self.buckets = shard_aligned_buckets(
+            self.config.buckets if self.config.buckets
+            else pow2_buckets(self.config.max_batch), self.n_devices)
+        self.max_bucket = self.buckets[-1]
+        # stale executables/plans/tiles were fitted to the old device
+        # count; re-plan everything up front (recovery pays it once)
+        self._fns.clear()
+        self.tile_choices.clear()
+        self._stragglers.clear()
+        self.plans = {}
+        for b in self.buckets:
+            self._plan_for(b)
+        after = executable_fingerprints(self.plans.values())
+        matches = {sb: after[sb] == h for sb, h in before.items()
+                   if sb in after}
+        self.stats["device_count"] = self.n_devices
+        self.fault_stats["remesh_events"].append({
+            "devices_before": devices_before,
+            "devices_after": self.n_devices,
+            "buckets": list(self.buckets),
+            "plan_hashes_before": before,
+            "plan_hashes_after": after,
+            "plan_hash_matches": matches,
+            "seconds": time.perf_counter() - t0,
+        })
+        if not all(matches.values()):
+            raise EngineDegraded(
+                f"post-remesh plan hash mismatch {matches}: the "
+                "shrunken mesh did not re-derive the validated "
+                "executables")
+
     def bucket_for(self, n: int) -> int:
         """Smallest bucket covering n requests (largest bucket if n exceeds
         them all — the caller then chunks)."""
@@ -540,26 +710,37 @@ class DcnnServeEngine:
     # -- synchronous path ----------------------------------------------
     def generate(self, z: np.ndarray) -> np.ndarray:
         """z: (B, z_dim) for ANY B: chunked/padded to the bucket set via
-        `plan_chunks`, so no batch size ever triggers a recompile."""
+        `plan_chunks`, so no batch size ever triggers a recompile.
+
+        Fault path: a transient dispatch failure retries inside
+        `_dispatch`; a detected device loss remeshes onto the survivors
+        (`_remesh`), then the interrupted chunk — plus everything still
+        queued behind it — re-plans against the post-loss bucket set and
+        re-runs, so the call completes on the shrunken mesh instead of
+        raising."""
         z = np.asarray(z, dtype=self.cfg.dtype)
         n = z.shape[0]
-        plan = self.plan_chunks(n)
-        pad_before = self.stats["padded_images"]
         outs: List[np.ndarray] = []
         i = 0
-        for take, bucket in plan:
+        chunks = self.plan_chunks(n)
+        while chunks:
+            take, bucket = chunks[0]
             chunk = z[i:i + take]
-            if take < bucket:
+            pad = bucket - take
+            if pad:
                 chunk = np.concatenate(
-                    [chunk, np.zeros((bucket - take,) + z.shape[1:],
-                                     z.dtype)], axis=0)
-                self.stats["padded_images"] += bucket - take
-            fn = self._get_fn(bucket)
-            traces_before = self.trace_counts.get(bucket, 0)
-            t0 = time.perf_counter()
-            y = np.asarray(fn(self.params, jnp.asarray(chunk)))
-            dt = time.perf_counter() - t0
-            if self.trace_counts.get(bucket, 0) == traces_before:
+                    [chunk, np.zeros((pad,) + z.shape[1:], z.dtype)],
+                    axis=0)
+            try:
+                y, dt, steady = self._dispatch(bucket, chunk)
+            except DeviceLossError as e:
+                self._remesh(e.keep)
+                chunks = self.plan_chunks(n - i)
+                continue
+            chunks.pop(0)
+            if pad:
+                self.stats["padded_images"] += pad
+            if steady:
                 # steady-state call: a call that traced (compiled) would
                 # poison the learned rates by orders of magnitude
                 bs = self.bucket_stats.setdefault(
@@ -575,9 +756,6 @@ class DcnnServeEngine:
                 bs["sumsq_seconds"] += dt * dt
             outs.append(y[:take])
             i += take
-        # the accounting is exact by construction; pin it against the plan
-        assert self.stats["padded_images"] - pad_before == sum(
-            b - t for t, b in plan), (plan, self.stats)
         self.stats["generate_calls"] += 1
         self.stats["images"] += n
         return (np.concatenate(outs, axis=0) if len(outs) != 1
@@ -609,37 +787,83 @@ class DcnnServeEngine:
         return out
 
     # -- micro-batching queue --------------------------------------------
-    def submit(self, z: np.ndarray) -> int:
-        """Enqueue a request of one or more z rows; returns a ticket id."""
+    def submit(self, z: np.ndarray,
+               deadline_s: Optional[float] = None) -> int:
+        """Enqueue a request of one or more z rows; returns a ticket id.
+
+        ``deadline_s`` (default: `EngineConfig.default_deadline_s`)
+        bounds how long the ticket may wait in the queue: a drain that
+        reaches it past the deadline fails it with `DeadlineExceeded`
+        instead of executing stale work (`collect` raises the typed
+        error)."""
         z = np.asarray(z, dtype=self.cfg.dtype)
         if z.ndim == 1:
             z = z[None, :]
         rid = self._next_id
         self._next_id += 1
-        self._pending.append((rid, z))
+        if deadline_s is None:
+            deadline_s = self.config.default_deadline_s
+        deadline = (None if deadline_s is None
+                    else time.monotonic() + deadline_s)
+        self._pending.append((rid, z, deadline))
         return rid
 
     def drain(self) -> None:
         """Run everything pending as one coalesced stream: all queued rows
         are concatenated and generated through the cost-aware
         `plan_chunks`, so ten 3-image requests run as a few large-bucket
-        calls, not ten bucket-4 calls."""
+        calls, not ten bucket-4 calls.
+
+        Failure semantics: a ticket whose deadline already passed fails
+        typed (`DeadlineExceeded`, raised at `collect`) without being
+        executed, and if the coalesced generate() itself fails, every
+        drained ticket is RESTORED to the queue before the error
+        propagates — a fault mid-generate must not silently drop the
+        queue (the pre-fix behavior lost every queued request)."""
         if not self._pending:
             return
         reqs, self._pending = self._pending, []
-        rows = np.concatenate([z for _, z in reqs], axis=0)
-        imgs = self.generate(rows)
+        live = []
+        now = time.monotonic()
+        for rid, z, deadline in reqs:
+            if deadline is not None and now > deadline:
+                self.fault_stats["deadline_expired"] += 1
+                self._failures[rid] = DeadlineExceeded(
+                    f"ticket {rid} missed its deadline by "
+                    f"{now - deadline:.3f}s before execution")
+            else:
+                live.append((rid, z, deadline))
+        if not live:
+            return
+        rows = np.concatenate([z for _, z, _ in live], axis=0)
+        try:
+            imgs = self.generate(rows)
+        except Exception:
+            self._pending = live + self._pending
+            raise
         ofs = 0
-        for rid, z in reqs:
+        for rid, z, _ in live:
             self._results[rid] = imgs[ofs:ofs + len(z)]
             ofs += len(z)
 
     def collect(self, rid: int) -> np.ndarray:
-        """Images for ticket ``rid`` (drains the queue if still pending)."""
-        if rid not in self._results:
+        """Images for ticket ``rid`` (drains the queue if still pending).
+
+        Raises the ticket's typed failure (e.g. `DeadlineExceeded`) if
+        it failed, and a KeyError that distinguishes a ticket this
+        engine never issued from one whose result was already handed
+        out."""
+        if rid not in self._results and rid not in self._failures:
             self.drain()
+        if rid in self._failures:
+            raise self._failures.pop(rid)
         if rid not in self._results:
-            raise KeyError(f"unknown or already-collected ticket {rid}")
+            if 0 <= rid < self._next_id:
+                raise KeyError(
+                    f"ticket {rid} was already collected (results are "
+                    "handed out exactly once)")
+            raise KeyError(f"unknown ticket {rid}: this engine never "
+                           "issued it")
         return self._results.pop(rid)
 
     @property

@@ -1,0 +1,27 @@
+"""Typed serving failures.
+
+The fault-tolerant engine's contract is *complete or fail typed*: a
+request either returns images or raises one of these — it never hangs on
+a dead mesh and never silently drops a queued ticket.  The dist-level
+call faults (`dist.inject.TransientCallError` / `DeviceLossError`) are
+inputs to the engine's recovery machinery; these are what escapes it.
+"""
+from __future__ import annotations
+
+
+class EngineError(RuntimeError):
+    """Base class for `DcnnServeEngine` failures."""
+
+
+class DeadlineExceeded(EngineError):
+    """The per-request deadline passed before the request executed; the
+    ticket was failed instead of serving stale work.  Submit again (or
+    raise the deadline)."""
+
+
+class EngineDegraded(EngineError):
+    """The engine cannot currently honor the request: transient-failure
+    retries exhausted, a device loss with no elastic mesh to shrink
+    onto, or post-remesh re-planning that did not re-derive the
+    validated executables.  The queue is intact — pending tickets stay
+    pending and a later drain retries them."""

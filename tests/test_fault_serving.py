@@ -1,0 +1,373 @@
+"""Fault-tolerant elastic serving: deterministic fault injection against
+`DcnnServeEngine` — transient-failure retry, typed deadline/degraded
+errors, drain queue preservation, straggler/heartbeat wiring, and the
+acceptance scenario: losing half of an 8-fake-device mesh mid-stream
+remeshes, re-plans (hash-asserted) and keeps serving bit-identically to
+a healthy half-size engine.  Multi-device cases run in subprocesses via
+`test_dist_multidevice.run_sub` (the XLA device-count flag must never
+leak into this process)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from test_dist_multidevice import run_sub
+
+from repro.dist.inject import (DeviceLoss, FaultInjector, SlowCall,
+                               TransientFailure)
+from repro.dist.pipeline import microbatch, pipeline_apply
+from repro.models.dcnn import (DcnnConfig, DeconvLayerCfg, generator_apply,
+                               generator_init)
+from repro.serve import (DcnnServeEngine, DeadlineExceeded, EngineConfig,
+                         EngineDegraded)
+
+TINY = DcnnConfig(
+    name="tiny-fault", z_dim=16, img_hw=16, img_c=1,
+    layers=(DeconvLayerCfg(16, 32, 4, 1, 0, "relu"),
+            DeconvLayerCfg(32, 16, 4, 2, 1, "relu"),
+            DeconvLayerCfg(16, 1, 4, 2, 1, "tanh")))
+
+# the same geometry, inlined for the subprocess tests (run_sub dedents)
+_TINY_SUB = """
+        from repro.models.dcnn import DcnnConfig, DeconvLayerCfg
+        TINY = DcnnConfig(
+            name="tiny-fault", z_dim=16, img_hw=16, img_c=1,
+            layers=(DeconvLayerCfg(16, 32, 4, 1, 0, "relu"),
+                    DeconvLayerCfg(32, 16, 4, 2, 1, "relu"),
+                    DeconvLayerCfg(16, 1, 4, 2, 1, "tanh")))
+"""
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.setattr(autotune, "_cache", None)
+    yield
+    monkeypatch.setattr(autotune, "_cache", None)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    params, _ = generator_init(jax.random.PRNGKey(0), TINY)
+    rng = np.random.RandomState(0)
+    z = rng.randn(4, TINY.z_dim).astype(np.float32)
+    ref = np.asarray(generator_apply(params, TINY, jnp.asarray(z),
+                                     backend="reverse_loop"))
+    return params, z, ref
+
+
+def _engine(params, injector=None, **over):
+    kw = dict(model=TINY, backend="pallas", buckets=(4,))
+    kw.update(over)
+    return DcnnServeEngine.from_config(EngineConfig(**kw), params,
+                                       fault_injector=injector)
+
+
+# ---------------------------------------------------------------------------
+# retry / degraded semantics
+# ---------------------------------------------------------------------------
+def test_transient_failure_retried_transparently(tmp_cache, tiny_setup):
+    """One injected transient failure: the retry succeeds and the output
+    is bit-identical to an uninjected engine (same pinned plan)."""
+    params, z, _ = tiny_setup
+    inj = FaultInjector([TransientFailure(at_call=0)])
+    eng = _engine(params, inj, max_retries=2, retry_backoff_s=0.01)
+    ref = _engine(params)
+    np.testing.assert_array_equal(eng.generate(z), ref.generate(z))
+    assert eng.fault_stats["retries"] == 1
+    assert eng.fault_stats["transient_failures"] == 1
+    assert inj.calls == 2   # failed dispatch + successful retry
+
+
+def test_retry_exhaustion_raises_typed(tmp_cache, tiny_setup):
+    """max_retries+1 consecutive transient failures surface as
+    `EngineDegraded` (typed), never an injector internal."""
+    params, z, _ = tiny_setup
+    inj = FaultInjector([TransientFailure(0), TransientFailure(1)])
+    eng = _engine(params, inj, max_retries=1, retry_backoff_s=0.01)
+    with pytest.raises(EngineDegraded, match="retries exhausted"):
+        eng.generate(z)
+    assert eng.fault_stats["transient_failures"] == 2
+
+
+def test_drain_restores_pending_on_failure(tmp_cache, tiny_setup):
+    """Regression: a failure mid-drain used to silently drop every queued
+    request (pending was popped before generate ran).  Now the tickets
+    are restored and the next drain serves them."""
+    params, z, ref = tiny_setup
+    inj = FaultInjector([TransientFailure(at_call=0)])
+    eng = _engine(params, inj, max_retries=0)
+    r1, r2 = eng.submit(z[:2]), eng.submit(z[2:])
+    with pytest.raises(EngineDegraded):
+        eng.collect(r1)
+    assert len(eng._pending) == 2      # nothing dropped
+    # the injected fault is spent: the retried drain completes both
+    out = np.concatenate([eng.collect(r1), eng.collect(r2)], axis=0)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_device_loss_without_mesh_is_degraded(tmp_cache, tiny_setup):
+    """A single-process engine has nothing to shrink onto: device loss
+    fails typed instead of retrying forever."""
+    params, z, _ = tiny_setup
+    inj = FaultInjector([DeviceLoss(at_call=0, keep=1)])
+    eng = _engine(params, inj)
+    with pytest.raises(EngineDegraded, match="elastic mesh"):
+        eng.generate(z)
+
+
+# ---------------------------------------------------------------------------
+# deadlines + collect semantics
+# ---------------------------------------------------------------------------
+def test_deadline_exceeded_is_typed_and_queue_survives(tmp_cache,
+                                                       tiny_setup):
+    """An expired ticket fails with `DeadlineExceeded` at collect; later
+    tickets on the same engine serve normally."""
+    params, z, ref = tiny_setup
+    eng = _engine(params)
+    rid = eng.submit(z, deadline_s=0.0)
+    time.sleep(0.02)
+    with pytest.raises(DeadlineExceeded, match="missed its deadline"):
+        eng.collect(rid)
+    assert eng.fault_stats["deadline_expired"] == 1
+    rid2 = eng.submit(z)               # no deadline: unaffected
+    np.testing.assert_allclose(eng.collect(rid2), ref,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_default_deadline_from_config(tmp_cache, tiny_setup):
+    params, z, _ = tiny_setup
+    eng = _engine(params, default_deadline_s=0.0)
+    rid = eng.submit(z)
+    time.sleep(0.02)
+    with pytest.raises(DeadlineExceeded):
+        eng.collect(rid)
+    # per-request deadline overrides the default
+    rid2 = eng.submit(z, deadline_s=60.0)
+    assert eng.collect(rid2).shape == (4, 16, 16, 1)
+
+
+def test_collect_distinguishes_unknown_from_collected(tmp_cache,
+                                                      tiny_setup):
+    params, z, _ = tiny_setup
+    eng = _engine(params)
+    rid = eng.submit(z)
+    eng.collect(rid)
+    with pytest.raises(KeyError, match="already collected"):
+        eng.collect(rid)
+    with pytest.raises(KeyError, match="never issued"):
+        eng.collect(rid + 999)
+
+
+# ---------------------------------------------------------------------------
+# straggler + heartbeat wiring
+# ---------------------------------------------------------------------------
+def test_straggler_flagged_and_heartbeat_fires_on_stall(tmp_cache,
+                                                        tiny_setup):
+    """An injected slow dispatch lands in the per-call timing window, so
+    the per-bucket StragglerMonitor flags it and the armed heartbeat
+    records the stall; an idle queue afterwards fires nothing (the
+    engine disarms between calls)."""
+    params, z, _ = tiny_setup
+    inj = FaultInjector([SlowCall(at_call=3, delay_s=1.0)])
+    eng = _engine(params, inj, straggler_warmup=1,
+                  heartbeat_timeout_s=0.2)
+    try:
+        for _ in range(4):   # call 0 compiles; 1 seeds; 2 steady; 3 slow
+            eng.generate(z)
+        assert eng.fault_stats["stragglers"] == 1
+        assert eng.fault_stats["heartbeat_fires"] >= 1
+        fires = eng.fault_stats["heartbeat_fires"]
+        time.sleep(0.5)      # idle != stalled
+        assert eng.fault_stats["heartbeat_fires"] == fires
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# dist.pipeline coverage (satellite): bubble accounting without a mesh
+# ---------------------------------------------------------------------------
+def test_pipeline_apply_meshless_parity_and_bubble_drop():
+    """pipeline_apply with mesh=None is the plain skewed schedule: every
+    microbatch matches the sequential stage-by-stage oracle and exactly
+    the n_stages-1 bubble outputs are dropped (n_micro outputs remain,
+    also when n_micro != n_stages)."""
+    rng = np.random.RandomState(0)
+    ws = jnp.array(rng.randn(3, 8, 8) * 0.3, jnp.float32)
+
+    def stage_fn(w, x):
+        return jnp.tanh(x @ w)
+
+    for n_micro in (3, 6):
+        x = jnp.array(rng.randn(2 * n_micro, 8), jnp.float32)
+        xm = microbatch(x, n_micro)
+        y = pipeline_apply(None, None, stage_fn, ws, xm)
+        assert y.shape == xm.shape     # bubbles dropped, nothing else
+        y_ref = x
+        for i in range(3):
+            y_ref = stage_fn(ws[i], y_ref)
+        np.testing.assert_allclose(np.asarray(y).reshape(-1, 8),
+                                   np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_microbatch_rejects_ragged():
+    with pytest.raises(ValueError, match="not divisible"):
+        microbatch(jnp.zeros((7, 4)), 2)
+
+
+# ---------------------------------------------------------------------------
+# multi-device scenarios (subprocess: 8 forced host devices)
+# ---------------------------------------------------------------------------
+def test_device_loss_elastic_rebucketing_bit_identical():
+    """ACCEPTANCE: on an 8-fake-device mesh, losing half the devices at
+    the first dispatch completes the in-flight request and every
+    subsequent one with outputs bit-identical to a healthy 4-device
+    engine; the recovery re-plans buckets with plan hashes matching the
+    pre-loss plans for the shared per-device batch."""
+    out = run_sub(_TINY_SUB + """
+        import os
+        os.environ.setdefault("REPRO_AUTOTUNE_CACHE", "/tmp/at_fault_a.json")
+        import jax, numpy as np
+        from repro.dist.fault import elastic_mesh
+        from repro.dist.inject import DeviceLoss, FaultInjector
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models.dcnn import generator_init
+        from repro.serve import DcnnServeEngine, EngineConfig
+
+        params, _ = generator_init(jax.random.PRNGKey(0), TINY)
+        inj = FaultInjector([DeviceLoss(at_call=0, keep=4)])
+        eng8 = DcnnServeEngine.from_config(
+            EngineConfig(model=TINY, backend="pallas",
+                         mesh=make_serving_mesh(),
+                         buckets=(1, 2, 4, 8, 16)),
+            params, fault_injector=inj)
+        assert eng8.buckets == (8, 16), eng8.buckets
+        eng4 = DcnnServeEngine.from_config(
+            EngineConfig(model=TINY, backend="pallas",
+                         mesh=elastic_mesh(jax.devices()[:4],
+                                           model_parallel=1),
+                         buckets=(1, 2, 4, 8, 16)), params)
+        rng = np.random.RandomState(0)
+        z = rng.randn(19, TINY.z_dim).astype(np.float32)
+        y8 = eng8.generate(z)      # loss fires at call 0 -> remesh
+        np.testing.assert_array_equal(y8, eng4.generate(z))
+        assert eng8.n_devices == 4
+        assert eng8.stats["device_count"] == 4
+        assert eng8.buckets == eng4.buckets == (4, 8, 16), (
+            eng8.buckets, eng4.buckets)
+        ev = eng8.fault_stats["remesh_events"][0]
+        assert ev["devices_before"] == 8 and ev["devices_after"] == 4
+        assert ev["plan_hash_matches"], ev
+        assert all(ev["plan_hash_matches"].values()), ev
+        assert ev["seconds"] > 0
+        # every shared per-device batch re-derived the same executable
+        for b in eng8.buckets:
+            assert (eng8.plans[b].stable_hash()
+                    == eng4.plans[b].stable_hash() if b in eng4.plans
+                    else True)
+        # subsequent requests stay bit-identical on the shrunken mesh
+        z2 = rng.randn(7, TINY.z_dim).astype(np.float32)
+        np.testing.assert_array_equal(eng8.generate(z2), eng4.generate(z2))
+        print("OK")
+    """, timeout=900)
+    assert "OK" in out
+
+
+def test_device_loss_midstream_completes_in_flight():
+    """Loss injected AFTER the first chunk already ran on 8 devices: the
+    interrupted generate() still completes (the remaining chunks re-plan
+    on the survivors) and matches the reference numerically; queued
+    submit tickets drain to completion through the same recovery."""
+    out = run_sub(_TINY_SUB + """
+        import os
+        os.environ.setdefault("REPRO_AUTOTUNE_CACHE", "/tmp/at_fault_b.json")
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.dist.inject import DeviceLoss, FaultInjector
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models.dcnn import generator_apply, generator_init
+        from repro.serve import DcnnServeEngine, EngineConfig
+
+        params, _ = generator_init(jax.random.PRNGKey(0), TINY)
+        inj = FaultInjector([DeviceLoss(at_call=1, keep=4)])
+        eng = DcnnServeEngine.from_config(
+            EngineConfig(model=TINY, backend="pallas",
+                         mesh=make_serving_mesh(),
+                         buckets=(1, 2, 4, 8, 16)),
+            params, fault_injector=inj)
+        rng = np.random.RandomState(0)
+        # three tickets; the coalesced 40-row drain runs 16+16+8: the
+        # second 16-chunk hits the loss mid-stream
+        zs = [rng.randn(n, TINY.z_dim).astype(np.float32)
+              for n in (16, 16, 8)]
+        rids = [eng.submit(z) for z in zs]
+        outs = [eng.collect(r) for r in rids]
+        assert eng.n_devices == 4
+        assert len(eng.fault_stats["remesh_events"]) == 1
+        for z, out in zip(zs, outs):
+            ref = np.asarray(generator_apply(params, TINY, jnp.asarray(z),
+                                             backend="reverse_loop"))
+            np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+        print("OK")
+    """, timeout=900)
+    assert "OK" in out
+
+
+def test_pipeline_apply_mesh_parity_with_tail_bubbles():
+    """Satellite: pipeline parity vs the sequential oracle on a real
+    4-device mesh with n_micro != n_stages (tail feed + bubble drop)."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist.pipeline import microbatch, pipeline_apply
+
+        mesh = jax.make_mesh((4,), ("pod",))
+        rng = np.random.RandomState(0)
+        ws = jnp.array(rng.randn(4, 16, 16) * 0.3, jnp.float32)
+
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+
+        x = jnp.array(rng.randn(12, 16), jnp.float32)
+        xm = microbatch(x, 6)          # 6 microbatches through 4 stages
+        y = pipeline_apply(mesh, "pod", stage_fn, ws, xm)
+        assert y.shape == xm.shape, y.shape   # 9 ticks, 3 bubbles dropped
+        y_ref = x
+        for i in range(4):
+            y_ref = stage_fn(ws[i], y_ref)
+        np.testing.assert_allclose(np.asarray(y).reshape(12, 16),
+                                   np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
+def test_elastic_remesh_reshard_params_bit_equal():
+    """Satellite: a replicated generator param tree survives an elastic
+    remesh to half the devices bit-for-bit (reshard_tree round-trip)."""
+    out = run_sub(_TINY_SUB + """
+        import jax, numpy as np
+        from repro.dist.fault import elastic_mesh, reshard_tree
+        from repro.dist.sharding import (make_rules, replicated_specs,
+                                         tree_shardings)
+        from repro.launch.mesh import make_serving_mesh
+        from repro.models.dcnn import generator_init
+
+        params, _ = generator_init(jax.random.PRNGKey(0), TINY)
+        host = jax.tree_util.tree_map(np.asarray, params)
+        rules = make_rules("tp")
+        m8 = make_serving_mesh()
+        p8 = jax.device_put(params, tree_shardings(
+            m8, rules, params, replicated_specs(params)))
+        m4 = elastic_mesh(jax.devices()[:4], model_parallel=1)
+        p4 = reshard_tree(p8, tree_shardings(
+            m4, rules, p8, replicated_specs(p8)))
+        for a, b in zip(jax.tree_util.tree_leaves(host),
+                        jax.tree_util.tree_leaves(p4)):
+            assert len(b.sharding.device_set) == 4
+            np.testing.assert_array_equal(a, np.asarray(b))
+        print("OK")
+    """, timeout=900)
+    assert "OK" in out

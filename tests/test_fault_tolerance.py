@@ -72,3 +72,109 @@ def test_elastic_mesh_scale_down():
     devs = jax.devices()  # single CPU device in tests
     m = elastic_mesh(devs, model_parallel=1)
     assert m.shape == {"data": 1, "model": 1}
+
+
+def test_straggler_warmup_seeds_with_mean():
+    """The first warmup_steps observations ALL seed the EMA (their mean),
+    matching the docstring — the pre-fix code seeded with only the first
+    sample, so one noisy first call became the baseline forever."""
+    m = StragglerMonitor(factor=3.0, warmup_steps=2, decay=0.9)
+    assert m.observe(0, 0.1) is False
+    assert m.observe(1, 0.3) is False   # seeds too (pre-fix: EMA-updated)
+    assert abs(m.ema - 0.2) < 1e-12     # warmup mean, not 0.1-anchored EMA
+
+    # boundary pin: with the 0.2 seed the 3x threshold sits at 0.6
+    flag = StragglerMonitor(factor=3.0, warmup_steps=2)
+    flag.observe(0, 0.1), flag.observe(1, 0.3)
+    assert flag.observe(2, 0.61) is True
+    assert flag.flagged == [2]
+    ok = StragglerMonitor(factor=3.0, warmup_steps=2)
+    ok.observe(0, 0.1), ok.observe(1, 0.3)
+    assert ok.observe(2, 0.59) is False
+    assert ok.flagged == []
+
+
+def test_straggler_zero_warmup_still_seeds():
+    m = StragglerMonitor(factor=3.0, warmup_steps=0)
+    assert m.observe(0, 0.1) is False   # nothing to judge against yet
+    assert m.observe(1, 0.5) is True
+
+
+def test_heartbeat_callback_error_does_not_kill_watcher():
+    """An exception raised by on_failure is recorded, and the watcher
+    thread survives to fire again after the next tick+silence (the
+    pre-fix watcher died silently on the first callback error)."""
+    def boom():
+        raise RuntimeError("callback boom")
+
+    hb = Heartbeat(timeout_s=0.08, on_failure=boom, poll_s=0.01)
+    try:
+        time.sleep(0.3)
+        assert hb.fire_count == 1            # fired once, not re-fired
+        assert len(hb.callback_errors) == 1
+        assert hb._thread.is_alive()
+        hb.tick()                            # reset: silence fires again
+        time.sleep(0.3)
+        assert hb.fire_count == 2
+        assert len(hb.callback_errors) == 2
+    finally:
+        hb.close()
+
+
+def test_heartbeat_no_double_fire_without_tick():
+    fired = []
+    hb = Heartbeat(timeout_s=0.05, on_failure=lambda: fired.append(1),
+                   poll_s=0.01)
+    try:
+        time.sleep(0.4)
+        assert fired == [1]   # one silence window => exactly one fire
+    finally:
+        hb.close()
+
+
+def test_heartbeat_disarm_gates_firing():
+    """A disarmed heartbeat never fires through silence; re-arming opens
+    a fresh window (the serving engine's idle-queue semantics)."""
+    fired = []
+    hb = Heartbeat(timeout_s=0.05, on_failure=lambda: fired.append(1),
+                   poll_s=0.01)
+    try:
+        hb.disarm()
+        time.sleep(0.3)
+        assert fired == []
+        hb.arm()
+        time.sleep(0.3)
+        assert fired == [1]
+    finally:
+        hb.close()
+
+
+def test_heartbeat_concurrent_ticks_race_free():
+    """Hammer tick() from several threads against a fast watcher: the
+    locked check-and-set must never double-fire one silence window."""
+    import threading
+
+    fired = []
+    hb = Heartbeat(timeout_s=0.04, on_failure=lambda: fired.append(1),
+                   poll_s=0.002)
+    stop = threading.Event()
+
+    def ticker():
+        while not stop.is_set():
+            hb.tick()
+            time.sleep(0.001)
+
+    threads = [threading.Thread(target=ticker) for _ in range(4)]
+    try:
+        for t in threads:
+            t.start()
+        time.sleep(0.3)
+        assert fired == []        # constant ticking: no fire
+        stop.set()
+        for t in threads:
+            t.join()
+        time.sleep(0.3)
+        assert fired == [1]       # then one silence => exactly one fire
+    finally:
+        stop.set()
+        hb.close()
