@@ -620,9 +620,113 @@ def print_degraded(row):
         print(f"  {label}-loss per bucket img/s: {tput}")
 
 
+def slo_rows(loads=(0.5, 1.0, 2.0), n_requests: int = 24,
+             req_rows: int = 4, prime_reps: int = 2):
+    """SLO-aware async frontend under an offered-load sweep.
+
+    Capacity is *measured* first (`prime` feeds the service model), then
+    each load point paces ``n_requests`` submissions at ``load`` x that
+    capacity through two tenant classes — gold (SLO-bound, priority 0,
+    degrade-tolerant) and std (no deadline) — and records the typed
+    outcome mix: completed / downgraded / shed at admission / shed late,
+    plus per-tenant p50/p99/CV of end-to-end latency.  The overload
+    claims this pins: at 0.5x capacity nothing sheds, and at 2x the
+    excess resolves as typed backpressure (AdmissionRejected), never a
+    hang — the CI `test-slo` gate asserts exactly that off this JSON."""
+    import time as _time
+
+    from repro.serve import (AdmissionRejected, AsyncServeFrontend,
+                             EngineConfig, TenantClass)
+
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_DCNN)
+    fe = AsyncServeFrontend.from_config(
+        EngineConfig(model=MNIST_DCNN, backend="pallas",
+                     buckets=(1, 2, 4, 8)),
+        params,
+        [TenantClass("gold", slo_ms=None, priority=0),  # slo set per load
+         TenantClass("std", slo_ms=None, priority=1)],
+        precisions=("fp32", "int8"), prime=prime_reps,
+        max_queue_rows=4 * req_rows)
+    try:
+        service_s = fe._model.service_seconds("fp32", req_rows,
+                                              fe._buckets)
+        if not service_s:
+            return {"error": "prime() produced no fp32 service estimate"}
+        # a gold SLO the measured fp32 path comfortably meets when the
+        # queue is short: admission sheds on *load*, not on jitter
+        gold_slo_ms = max(50.0, 20.0 * service_s * 1e3)
+        capacity_rps = 1.0 / service_s
+        rng = np.random.RandomState(0)
+        rows = []
+        for load in loads:
+            fe.reset_stats()
+            interval = 1.0 / (load * capacity_rps)
+            rids, rejected = [], 0
+            t_start = _time.perf_counter()
+            for i in range(n_requests):
+                z = rng.randn(req_rows, MNIST_DCNN.z_dim).astype(
+                    np.float32)
+                tenant = "gold" if i % 2 == 0 else "std"
+                try:
+                    rids.append(fe.submit(
+                        z, tenant,
+                        slo_ms=gold_slo_ms if tenant == "gold" else None))
+                except AdmissionRejected:
+                    rejected += 1
+                _time.sleep(interval)
+            hangs = 0
+            for rid in rids:
+                try:
+                    fe.result(rid, timeout_s=120)
+                except AdmissionRejected:
+                    pass            # typed late shed: resolved, not hung
+                except Exception:
+                    hangs += 1
+            wall = _time.perf_counter() - t_start
+            st = fe.stats()
+            shed = sum(t["shed"] for t in st["tenants"].values())
+            rows.append({
+                "load": load,
+                "offered_rps": load * capacity_rps,
+                "achieved_rps": len(rids) / wall,
+                "requests": n_requests,
+                "admitted": len(rids),
+                "rejected_at_submit": rejected,
+                "shed_total": shed,
+                "hangs": hangs,
+                "gold_slo_ms": gold_slo_ms,
+                "tenants": st["tenants"],
+                "estimates_s": st["estimates_s"],
+            })
+        return {"capacity_rps": capacity_rps, "req_rows": req_rows,
+                "buckets": list(fe._buckets), "sweep": rows}
+    finally:
+        fe.close()
+
+
+def print_slo(row):
+    if not row:
+        return
+    print("# SLO-aware async frontend: offered-load sweep (gold = "
+          "SLO-bound priority tenant, std = no deadline)")
+    if "error" in row:
+        print(f"slo bench failed:\n{row['error']}")
+        return
+    print(f"measured capacity ~{row['capacity_rps']:.1f} req/s at "
+          f"{row['req_rows']} rows/request, buckets={row['buckets']}")
+    for r in row["sweep"]:
+        g = r["tenants"]["gold"]
+        p99 = f"{g['p99_ms']:.1f}" if "p99_ms" in g else "n/a"
+        print(f"  {r['load']:.1f}x load: admitted {r['admitted']}/"
+              f"{r['requests']} shed={r['shed_total']} "
+              f"downgraded={sum(t['downgraded'] for t in r['tenants'].values())} "
+              f"hangs={r['hangs']} gold p99={p99} ms "
+              f"(slo {r['gold_slo_ms']:.0f} ms)")
+
+
 def write_json(path: str, table2, traffic, autotune, scaling,
                batch_sweep=None, serving=None, sharded=None, quant=None,
-               plan=None, degraded=None):
+               plan=None, degraded=None, slo=None):
     with open(path, "w") as f:
         json.dump({"table2": table2, "traffic": traffic,
                    "autotune": autotune, "scaling": scaling,
@@ -631,7 +735,8 @@ def write_json(path: str, table2, traffic, autotune, scaling,
                    "sharded": sharded or {},
                    "quant": quant or [],
                    "plan": plan or [],
-                   "degraded": degraded or {}},
+                   "degraded": degraded or {},
+                   "slo": slo or {}},
                   f, indent=1, default=float)
     print(f"[bench_deconv] wrote {path}")
 
@@ -709,6 +814,7 @@ def main(reps: int = 50, smoke: bool = False,
         serving = serving_sweep_rows(reps=1)
         sharded = sharded_rows(devices=8, stream=(5, 8))
         degraded = degraded_rows(devices=8, keep=4, stream=(5, 8), reps=1)
+        slo = slo_rows(loads=(0.5, 2.0), n_requests=8, prime_reps=1)
         q_rows = quant_rows(batch=64, mmd_n=16, calib_n=32)
         p_rows = plan_rows(batch=64)
         print_traffic(t_rows)
@@ -725,11 +831,13 @@ def main(reps: int = 50, smoke: bool = False,
         print()
         print_degraded(degraded)
         print()
+        print_slo(slo)
+        print()
         print_quant(q_rows)
         print()
         print_plan_rows(p_rows)
         write_json(json_path, [], t_rows, a_rows, s_rows, b_rows, serving,
-                   sharded, q_rows, p_rows, degraded)
+                   sharded, q_rows, p_rows, degraded, slo)
         return []
     rows = run(reps)
     print("# Table II analogue: GOps/s mean (cv) per layer; cv = run-to-run "
@@ -768,13 +876,16 @@ def main(reps: int = 50, smoke: bool = False,
     degraded = degraded_rows(devices=8, keep=4)
     print_degraded(degraded)
     print()
+    slo = slo_rows()
+    print_slo(slo)
+    print()
     q_rows = quant_rows(batch=64, mmd_n=32, calib_n=64)
     print_quant(q_rows)
     print()
     p_rows = plan_rows(batch=64)
     print_plan_rows(p_rows)
     write_json(json_path, rows, t_rows, a_rows, s_rows, b_rows, serving,
-               sharded, q_rows, p_rows, degraded)
+               sharded, q_rows, p_rows, degraded, slo)
     return rows
 
 

@@ -5,10 +5,17 @@ run-to-run-variation measurement.
     PYTHONPATH=src python examples/serve_dcnn.py [--net celeba] [--reqs 20]
                                                  [--precision int8]
                                                  [--plan-json plan.json]
+                                                 [--async [--slo-ms 50]]
 
 ``--plan-json`` writes the engine's largest-bucket NetworkPlan to disk —
 the artifact a deployment pins next to its checkpoint and reloads with
 ``NetworkPlan.load`` to serve exactly the validated configuration.
+
+``--async`` routes the stream through the SLO-aware `AsyncServeFrontend`
+instead of the raw engine: requests carry a per-tenant deadline
+(``--slo-ms``), admission control sheds typed what cannot make it, and
+the scheduler downgrades fp32 requests onto the pinned int8 chain when
+that is the only way to hold the SLO.
 """
 import argparse
 import time
@@ -17,7 +24,46 @@ import jax
 import numpy as np
 
 from repro.models.dcnn import CELEBA_DCNN, MNIST_DCNN, generator_init
-from repro.serve import DcnnServeEngine, EngineConfig
+from repro.serve import (AdmissionRejected, AsyncServeFrontend,
+                         DcnnServeEngine, EngineConfig, TenantClass)
+
+
+def run_async(cfg, params, args):
+    """Mixed gold/std tenant stream through the async frontend."""
+    fe = AsyncServeFrontend.from_config(
+        EngineConfig(model=cfg, backend=args.backend,
+                     max_batch=args.batch, calib_batch=32),
+        params,
+        [TenantClass("gold", slo_ms=args.slo_ms, priority=0),
+         TenantClass("std", slo_ms=None, priority=1)],
+        precisions=("fp32", "int8"), prime=1)
+    try:
+        rng = np.random.RandomState(0)
+        rids, rejected = [], 0
+        for i in range(args.reqs):
+            n = args.batch if i % 3 else max(1, args.batch - i % 5)
+            z = rng.randn(n, cfg.z_dim).astype(np.float32)
+            try:
+                rids.append(fe.submit(z, "gold" if i % 2 == 0 else "std"))
+            except AdmissionRejected as e:
+                rejected += 1
+                print(f"  req {i}: shed at admission ({e.stage})")
+        for rid in rids:
+            try:
+                fe.result(rid, timeout_s=300)
+            except AdmissionRejected as e:
+                print(f"  req {rid}: shed in queue ({e.stage})")
+        st = fe.stats()
+        print(f"{cfg.name} async serving, gold slo={args.slo_ms} ms "
+              f"(admission rejected {rejected}):")
+        for name, t in st["tenants"].items():
+            p99 = f"{t['p99_ms']:.1f} ms" if "p99_ms" in t else "n/a"
+            print(f"  {name}: completed={t['completed']} "
+                  f"downgraded={t['downgraded']} shed={t['shed']} "
+                  f"p99={p99}")
+        print(f"  pinned plans: {sorted(fe.plan_fingerprints())}")
+    finally:
+        fe.close()
 
 
 def main():
@@ -30,10 +76,17 @@ def main():
     ap.add_argument("--precision", default="fp32", choices=["fp32", "int8"])
     ap.add_argument("--plan-json", default=None,
                     help="write the largest bucket's NetworkPlan here")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve through the SLO-aware async frontend")
+    ap.add_argument("--slo-ms", type=float, default=200.0,
+                    help="gold-tenant latency SLO for --async (ms)")
     args = ap.parse_args()
 
     cfg = MNIST_DCNN if args.net == "mnist" else CELEBA_DCNN
     params, _ = generator_init(jax.random.PRNGKey(0), cfg)
+    if args.use_async:
+        run_async(cfg, params, args)
+        return
     # plan/execute engine: one EngineConfig instead of a kwarg pile, one
     # pinned NetworkPlan + compiled executable per power-of-two bucket,
     # pre-compiled by warmup; mixed request sizes never recompile.

@@ -39,6 +39,14 @@ class StragglerMonitor:
         self._warmup_sum = 0.0
         self._warmup_n = 0
 
+    def estimate(self) -> Optional[float]:
+        """Current EMA of the healthy per-step wall clock (None before any
+        observation).  Stragglers never update the EMA, so this is the
+        engine's best *healthy* service-time estimate — the capacity
+        signal SLO admission control and deadline-aware scheduling feed
+        on (serve.scheduler.ServiceModel seeds from it)."""
+        return self.ema
+
     def observe(self, step: int, dt: float) -> bool:
         self._n += 1
         if self._n <= self.warmup_steps or self.ema is None:

@@ -10,10 +10,10 @@ configuration the way the paper pins a bitstream.
 from .deconv_plan import (PLAN_SCHEMA_VERSION, DeconvPlan, PlanSchemaError,
                           build_layer_plan)
 from .network_plan import (NetworkPlan, build_network_plan,
-                           executable_fingerprints)
+                           executable_fingerprints, variant_fingerprints)
 
 __all__ = [
     "PLAN_SCHEMA_VERSION", "DeconvPlan", "PlanSchemaError",
     "build_layer_plan", "NetworkPlan", "build_network_plan",
-    "executable_fingerprints",
+    "executable_fingerprints", "variant_fingerprints",
 ]

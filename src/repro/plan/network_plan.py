@@ -333,6 +333,26 @@ def executable_fingerprints(plans) -> Dict[int, str]:
     return out
 
 
+def variant_fingerprints(plans) -> Dict[str, str]:
+    """{"b{per-device batch}/{precision}" -> stable hash} over plans that
+    span *precision variants* (the async frontend pins one plan per
+    bucket x precision: the fp32 chain and its int8 degradation both
+    serve the same bucket, so `executable_fingerprints`' batch-only key
+    would see a false conflict).  Same contract otherwise: two plans for
+    the same (batch, precision) must agree on the hash, and a deployment
+    compares these dicts across hosts / across a remesh to prove "same
+    executables everywhere"."""
+    out: Dict[str, str] = {}
+    for p in plans:
+        key = f"b{p.batch}/{p.precision}"
+        h = p.stable_hash()
+        prev = out.setdefault(key, h)
+        if prev != h:
+            raise ValueError(
+                f"two plans for {key} disagree: {prev} vs {h}")
+    return out
+
+
 def timed_build(fn, *args, **kwargs):
     """(result, seconds) helper for plan-build cost accounting."""
     t0 = time.perf_counter()

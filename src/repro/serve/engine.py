@@ -17,9 +17,10 @@ the largest fitting bucket."""
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import warnings
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +31,7 @@ from ..dist.inject import DeviceLossError, TransientCallError
 from ..models.dcnn import DcnnConfig, generator_apply
 from ..models.transformer import ModelConfig, apply_lm, init_cache
 from .config import EngineConfig
-from .errors import DeadlineExceeded, EngineDegraded
+from .errors import AdmissionRejected, DeadlineExceeded, EngineDegraded
 from .sampling import sample
 
 
@@ -400,7 +401,17 @@ class DcnnServeEngine:
         self.tile_choices: Dict[int, Optional[dict]] = {}
         self.trace_counts: Dict[int, int] = {}
         self._sparse_plan_memo: Dict[tuple, tuple] = {}
-        # queue entries are (ticket, rows, absolute deadline or None)
+        # queue entries are (ticket, rows, absolute deadline or None).
+        # _qlock guards the queue state (submit/collect/shed may run from
+        # concurrent caller threads under the async frontend); _drain_lock
+        # serializes drains so two threads never run generate() on the
+        # same engine at once; _inflight names tickets a drain has taken
+        # off the queue but not yet resolved, so a concurrent collect
+        # waits for that drain instead of misreporting "already
+        # collected".
+        self._qlock = threading.Lock()
+        self._drain_lock = threading.Lock()
+        self._inflight: Set[int] = set()
         self._pending: List[Tuple[int, np.ndarray, Optional[float]]] = []
         self._results: Dict[int, np.ndarray] = {}
         self._failures: Dict[int, Exception] = {}
@@ -415,7 +426,7 @@ class DcnnServeEngine:
         self._dispatches = 0
         self.fault_stats = {
             "retries": 0, "transient_failures": 0, "stragglers": 0,
-            "heartbeat_fires": 0, "deadline_expired": 0,
+            "heartbeat_fires": 0, "deadline_expired": 0, "shed": 0,
             "remesh_events": [],
         }
         self._heartbeat = None
@@ -549,10 +560,13 @@ class DcnnServeEngine:
         around the call, bounded retry-with-backoff on transient
         failures, straggler detection on the steady-state wall clock.
 
-        Returns ``(images, seconds, steady)`` where ``steady`` means the
-        call did not trace (compile) — only steady samples feed the
-        timing stats and the straggler EMA.  `TransientCallError` is
-        retried up to ``max_retries`` times then raised as
+        Returns ``(images, seconds, steady, retried)`` where ``steady``
+        means the call did not trace (compile) and ``retried`` means at
+        least one transient-failure retry preceded the success — only
+        steady samples feed the timing stats and the straggler EMA, and
+        retried ones are tagged so they never mix into the healthy
+        run-to-run CV samples (Table II accounting).  `TransientCallError`
+        is retried up to ``max_retries`` times then raised as
         `EngineDegraded`; `DeviceLossError` escapes to `generate`, which
         remeshes."""
         fn = self._get_fn(bucket)
@@ -584,14 +598,17 @@ class DcnnServeEngine:
                     self._heartbeat.disarm()
             self._dispatches += 1
             steady = self.trace_counts.get(bucket, 0) == traces_before
-            if steady:
+            retried = attempt > 0
+            if steady and not retried:
+                # a dispatch that needed retries is not a healthy sample:
+                # it must not seed the straggler baseline either
                 mon = self._stragglers.setdefault(
                     bucket, StragglerMonitor(
                         factor=self.config.straggler_factor,
                         warmup_steps=self.config.straggler_warmup))
                 if mon.observe(self._dispatches, dt):
                     self.fault_stats["stragglers"] += 1
-            return y, dt, steady
+            return y, dt, steady, retried
 
     def _remesh(self, keep: int) -> None:
         """Elastic recovery from device loss: shrink onto the surviving
@@ -642,7 +659,14 @@ class DcnnServeEngine:
         matches = {sb: after[sb] == h for sb, h in before.items()
                    if sb in after}
         self.stats["device_count"] = self.n_devices
+        # timing samples from the pre-loss mesh describe a capacity that
+        # no longer exists: mixing them into post-loss rates/CV would
+        # report a throughput nobody can have.  Snapshot them into the
+        # remesh event (observability) and start the accounting fresh.
+        stats_before = {b: dict(s) for b, s in self.bucket_stats.items()}
+        self.bucket_stats = {}
         self.fault_stats["remesh_events"].append({
+            "bucket_stats_before": stats_before,
             "devices_before": devices_before,
             "devices_after": self.n_devices,
             "buckets": list(self.buckets),
@@ -732,7 +756,7 @@ class DcnnServeEngine:
                     [chunk, np.zeros((pad,) + z.shape[1:], z.dtype)],
                     axis=0)
             try:
-                y, dt, steady = self._dispatch(bucket, chunk)
+                y, dt, steady, retried = self._dispatch(bucket, chunk)
             except DeviceLossError as e:
                 self._remesh(e.keep)
                 chunks = self.plan_chunks(n - i)
@@ -745,15 +769,25 @@ class DcnnServeEngine:
                 # poison the learned rates by orders of magnitude
                 bs = self.bucket_stats.setdefault(
                     bucket, {"calls": 0, "images": 0, "seconds": 0.0,
-                             "sumsq_seconds": 0.0})
-                bs["calls"] += 1
-                bs["images"] += take
-                # running first/second moments of the per-call wall clock
-                # (the paper's Table II mean/std methodology) — O(1)
-                # state, not a per-call sample list a long-lived engine
-                # would grow without bound
-                bs["seconds"] += dt
-                bs["sumsq_seconds"] += dt * dt
+                             "sumsq_seconds": 0.0, "tainted_calls": 0,
+                             "tainted_seconds": 0.0})
+                if retried:
+                    # outcome-tagged: a dispatch that needed transient
+                    # retries is real work but not a healthy run — its
+                    # wall clock stays out of the Table II mean/std/CV
+                    # samples (which are *run-to-run variation of the
+                    # healthy path*, the paper's predictability claim)
+                    bs["tainted_calls"] += 1
+                    bs["tainted_seconds"] += dt
+                else:
+                    bs["calls"] += 1
+                    bs["images"] += take
+                    # running first/second moments of the per-call wall
+                    # clock (the paper's Table II mean/std methodology)
+                    # — O(1) state, not a per-call sample list a
+                    # long-lived engine would grow without bound
+                    bs["seconds"] += dt
+                    bs["sumsq_seconds"] += dt * dt
             outs.append(y[:take])
             i += take
         self.stats["generate_calls"] += 1
@@ -767,7 +801,14 @@ class DcnnServeEngine:
         per device (the mesh analogue of the paper's per-PE utilization),
         plus run-to-run variation — mean, std and CV (std/mean) of the
         per-call wall clock over repeated calls, the paper's Table II
-        methodology already used by `benchmarks.common.time_fn`."""
+        methodology already used by `benchmarks.common.time_fn`.
+
+        Samples are outcome-tagged: only *healthy* dispatches (no
+        transient-failure retries, same mesh) feed the mean/std/CV;
+        retried dispatches surface as ``tainted_calls`` /
+        ``tainted_seconds`` alongside, and a device-loss remesh resets
+        the accounting entirely (the pre-loss snapshot lives in the
+        remesh event)."""
         out = {}
         for bucket, bs in self.bucket_stats.items():
             if bs["seconds"] <= 0.0:
@@ -783,8 +824,25 @@ class DcnnServeEngine:
                 "mean_s": mean_s,
                 "std_s": std_s,
                 "cv": std_s / max(mean_s, 1e-12),
+                "tainted_calls": bs.get("tainted_calls", 0),
+                "tainted_seconds": bs.get("tainted_seconds", 0.0),
             }
         return out
+
+    def service_estimate(self, bucket: int) -> Optional[float]:
+        """Best current estimate of one steady dispatch's wall clock for
+        ``bucket``: the per-bucket `StragglerMonitor` EMA when it has
+        observations (tracks drift, ignores outliers), else the healthy
+        mean from ``bucket_stats``, else None (no data yet).  This is the
+        capacity signal the SLO frontend's admission control and
+        deadline-aware scheduler run on."""
+        mon = self._stragglers.get(bucket)
+        if mon is not None and mon.estimate() is not None:
+            return mon.estimate()
+        bs = self.bucket_stats.get(bucket)
+        if bs and bs["calls"] > 0:
+            return bs["seconds"] / bs["calls"]
+        return None
 
     # -- micro-batching queue --------------------------------------------
     def submit(self, z: np.ndarray,
@@ -795,18 +853,38 @@ class DcnnServeEngine:
         bounds how long the ticket may wait in the queue: a drain that
         reaches it past the deadline fails it with `DeadlineExceeded`
         instead of executing stale work (`collect` raises the typed
-        error)."""
+        error).  Thread-safe: concurrent submitters get distinct
+        tickets."""
         z = np.asarray(z, dtype=self.cfg.dtype)
         if z.ndim == 1:
             z = z[None, :]
-        rid = self._next_id
-        self._next_id += 1
         if deadline_s is None:
             deadline_s = self.config.default_deadline_s
         deadline = (None if deadline_s is None
                     else time.monotonic() + deadline_s)
-        self._pending.append((rid, z, deadline))
+        with self._qlock:
+            rid = self._next_id
+            self._next_id += 1
+            self._pending.append((rid, z, deadline))
         return rid
+
+    def shed(self, rid: int, reason: str = "") -> bool:
+        """Remove a still-pending ticket from the queue and fail it typed
+        (`AdmissionRejected`) — the backpressure lever: load-shedding a
+        ticket that will not make its deadline must resolve it, never
+        silently drop it (a dropped ticket is a caller blocked forever).
+        Returns False if the ticket is no longer pending (already
+        draining, resolved, or never issued)."""
+        with self._qlock:
+            for i, (t, _, _) in enumerate(self._pending):
+                if t == rid:
+                    del self._pending[i]
+                    self.fault_stats["shed"] += 1
+                    self._failures[rid] = AdmissionRejected(
+                        reason or f"ticket {rid} shed before execution",
+                        stage="shed")
+                    return True
+        return False
 
     def drain(self) -> None:
         """Run everything pending as one coalesced stream: all queued rows
@@ -819,52 +897,117 @@ class DcnnServeEngine:
         executed, and if the coalesced generate() itself fails, every
         drained ticket is RESTORED to the queue before the error
         propagates — a fault mid-generate must not silently drop the
-        queue (the pre-fix behavior lost every queued request)."""
-        if not self._pending:
-            return
-        reqs, self._pending = self._pending, []
-        live = []
-        now = time.monotonic()
-        for rid, z, deadline in reqs:
-            if deadline is not None and now > deadline:
-                self.fault_stats["deadline_expired"] += 1
-                self._failures[rid] = DeadlineExceeded(
-                    f"ticket {rid} missed its deadline by "
-                    f"{now - deadline:.3f}s before execution")
-            else:
-                live.append((rid, z, deadline))
+        queue (the pre-fix behavior lost every queued request).
+
+        Thread-safe: drains are serialized (two threads never run
+        generate() on one engine concurrently) and in-flight tickets are
+        tracked so a concurrent `collect` waits for the owning drain
+        instead of misreporting the ticket as already collected."""
+        with self._drain_lock:
+            self._drain_locked()
+
+    def _drain_locked(self) -> None:
+        with self._qlock:
+            if not self._pending:
+                return
+            reqs, self._pending = self._pending, []
+            live = []
+            now = time.monotonic()
+            for rid, z, deadline in reqs:
+                if deadline is not None and now > deadline:
+                    self.fault_stats["deadline_expired"] += 1
+                    self._failures[rid] = DeadlineExceeded(
+                        f"ticket {rid} missed its deadline by "
+                        f"{now - deadline:.3f}s before execution")
+                else:
+                    live.append((rid, z, deadline))
+                    self._inflight.add(rid)
         if not live:
             return
         rows = np.concatenate([z for _, z, _ in live], axis=0)
         try:
             imgs = self.generate(rows)
         except Exception:
-            self._pending = live + self._pending
+            with self._qlock:
+                self._pending = live + self._pending
+                self._inflight.difference_update(r for r, _, _ in live)
             raise
-        ofs = 0
-        for rid, z, _ in live:
-            self._results[rid] = imgs[ofs:ofs + len(z)]
-            ofs += len(z)
+        with self._qlock:
+            ofs = 0
+            for rid, z, _ in live:
+                self._results[rid] = imgs[ofs:ofs + len(z)]
+                ofs += len(z)
+                self._inflight.discard(rid)
 
-    def collect(self, rid: int) -> np.ndarray:
+    def collect(self, rid: int,
+                timeout_s: Optional[float] = None) -> np.ndarray:
         """Images for ticket ``rid`` (drains the queue if still pending).
 
-        Raises the ticket's typed failure (e.g. `DeadlineExceeded`) if
-        it failed, and a KeyError that distinguishes a ticket this
-        engine never issued from one whose result was already handed
-        out."""
-        if rid not in self._results and rid not in self._failures:
-            self.drain()
-        if rid in self._failures:
-            raise self._failures.pop(rid)
-        if rid not in self._results:
-            if 0 <= rid < self._next_id:
+        Raises the ticket's typed failure (e.g. `DeadlineExceeded`,
+        `AdmissionRejected`) if it failed, and a KeyError that
+        distinguishes a ticket this engine never issued from one whose
+        result was already handed out.
+
+        ``timeout_s`` bounds the wait end-to-end: a ticket that cannot
+        resolve in time — another thread's drain still owns it, or its
+        dispatch was shed / lost mid-remesh and nothing will ever
+        deliver it — raises `DeadlineExceeded` at expiry instead of
+        blocking forever (the pre-fix behavior for a vanished ticket was
+        an unbounded wait under concurrent draining)."""
+        deadline = (None if timeout_s is None
+                    else time.monotonic() + timeout_s)
+
+        def expired() -> bool:
+            return deadline is not None and time.monotonic() >= deadline
+
+        while True:
+            with self._qlock:
+                if rid in self._failures:
+                    raise self._failures.pop(rid)
+                if rid in self._results:
+                    return self._results.pop(rid)
+                pending = any(t == rid for t, _, _ in self._pending)
+                inflight = rid in self._inflight
+                issued = 0 <= rid < self._next_id
+            if not issued:
+                raise KeyError(f"unknown ticket {rid}: this engine never "
+                               "issued it")
+            if pending:
+                # drive the queue ourselves; honor the timeout while
+                # waiting for another thread's drain to release the lock
+                if deadline is None:
+                    self.drain()
+                    continue
+                remaining = deadline - time.monotonic()
+                if remaining <= 0 or not self._drain_lock.acquire(
+                        timeout=remaining):
+                    raise DeadlineExceeded(
+                        f"ticket {rid} still pending after "
+                        f"{timeout_s:.3f}s (queue busy)")
+                try:
+                    self._drain_locked()
+                finally:
+                    self._drain_lock.release()
+                continue
+            if inflight:
+                # another thread's drain owns it: it will resolve (or be
+                # restored to pending) when that drain finishes
+                if expired():
+                    raise DeadlineExceeded(
+                        f"ticket {rid} still in flight after "
+                        f"{timeout_s:.3f}s")
+                time.sleep(0.001)
+                continue
+            # issued, but neither pending, in flight, nor resolved
+            if deadline is None:
                 raise KeyError(
                     f"ticket {rid} was already collected (results are "
                     "handed out exactly once)")
-            raise KeyError(f"unknown ticket {rid}: this engine never "
-                           "issued it")
-        return self._results.pop(rid)
+            if expired():
+                raise DeadlineExceeded(
+                    f"ticket {rid} did not resolve within {timeout_s:.3f}s "
+                    "(dispatch shed or lost mid-remesh)")
+            time.sleep(0.001)
 
     @property
     def total_compiles(self) -> int:

@@ -19,6 +19,21 @@ class DeadlineExceeded(EngineError):
     raise the deadline)."""
 
 
+class AdmissionRejected(EngineError):
+    """The request was refused *before* burning device time: the bounded
+    queue is full (backpressure), or the predicted completion time —
+    queue backlog plus the service-time estimate at the cheapest
+    precision the tenant allows — would bust its SLO, or the scheduler
+    shed it after a failure-requeue could no longer make the deadline.
+    ``stage`` says which gate fired ("queue_full", "predicted_slo",
+    "late", "requeue", "shed", "shutdown").  Back off and resubmit, or
+    relax the SLO."""
+
+    def __init__(self, message: str, stage: str = "shed"):
+        super().__init__(message)
+        self.stage = stage
+
+
 class EngineDegraded(EngineError):
     """The engine cannot currently honor the request: transient-failure
     retries exhausted, a device loss with no elastic mesh to shrink

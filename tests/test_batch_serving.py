@@ -265,6 +265,11 @@ def test_throughput_reports_run_to_run_cv(tmp_cache, rng):
     assert row["std_s"] >= 0.0 and np.isfinite(row["cv"])
     assert row["img_per_s"] == pytest.approx(
         bs["images"] / bs["seconds"])
+    # outcome tagging: a fault-free run has no tainted samples, and the
+    # healthy counters alone fed the moments above
+    assert row["tainted_calls"] == 0
+    assert row["tainted_seconds"] == 0.0
+    assert bs["tainted_calls"] == 0
 
 
 def test_sparse_backend_buckets_share_plans(tmp_cache, rng):

@@ -93,6 +93,30 @@ def test_retry_exhaustion_raises_typed(tmp_cache, tiny_setup):
     assert eng.fault_stats["transient_failures"] == 2
 
 
+def test_retried_dispatch_tainted_not_in_healthy_cv(tmp_cache, tiny_setup):
+    """CV-accounting audit: a dispatch that needed a transient retry is
+    tagged ``tainted`` — its wall clock (which includes the failed
+    attempt's backoff) must not mix into the healthy run-to-run mean/std/
+    CV samples (Table II is a statement about the healthy path), nor seed
+    the straggler EMA the SLO scheduler reads as capacity."""
+    params, z, _ = tiny_setup
+    inj = FaultInjector([TransientFailure(at_call=1)])
+    eng = _engine(params, inj, max_retries=2, retry_backoff_s=0.01)
+    eng.generate(z)                    # call 0: compiles, never sampled
+    assert eng.bucket_stats == {}
+    eng.generate(z)                    # call 1 fails -> retried success
+    bs = eng.bucket_stats[4]
+    assert bs["tainted_calls"] == 1 and bs["tainted_seconds"] > 0
+    assert bs["calls"] == 0 and bs["seconds"] == 0.0
+    assert eng.throughput() == {}      # no healthy sample yet
+    assert eng.service_estimate(4) is None   # tainted never seeds capacity
+    eng.generate(z)                    # healthy steady call
+    row = eng.throughput()[4]
+    assert row["calls"] == 1 and row["tainted_calls"] == 1
+    assert row["mean_s"] == pytest.approx(bs["seconds"])
+    assert eng.service_estimate(4) == pytest.approx(bs["seconds"])
+
+
 def test_drain_restores_pending_on_failure(tmp_cache, tiny_setup):
     """Regression: a failure mid-drain used to silently drop every queued
     request (pending was popped before generate ran).  Now the tickets

@@ -1,0 +1,150 @@
+"""Randomized interleaving stress for the engine's submit/collect/drain
+micro-batching queue: concurrent submitters, out-of-order collects and
+mid-stream drains must deliver every ticket exactly once — no ticket
+dropped, none double-delivered, no unbounded wait.  Seeded (the
+interleaving pressure comes from real threads, the *workload* from a
+fixed RandomState) so a failure reproduces."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from test_fault_serving import TINY, _engine, tiny_setup, tmp_cache  # noqa: F401
+
+from repro.models.dcnn import generator_apply
+from repro.serve import AdmissionRejected, DeadlineExceeded
+
+
+def test_randomized_interleaving_exactly_once(tmp_cache, tiny_setup):
+    """4 submitter threads x 12 requests of random size, each collecting
+    its own tickets out of submission order, against a drainer thread
+    firing mid-stream drains: every ticket resolves exactly once with
+    the right rows, and a second collect is a typed KeyError."""
+    params, _, _ = tiny_setup
+    eng = _engine(params, buckets=(2, 4))
+    eng.generate(np.zeros((4, TINY.z_dim), np.float32))   # compile b4
+    eng.generate(np.zeros((2, TINY.z_dim), np.float32))   # compile b2
+    images_before = eng.stats["images"]
+    rng = np.random.RandomState(42)
+    payloads = {}                      # rid -> z  (written under lock)
+    results = {}                       # rid -> images
+    errors = []
+    reg = threading.Lock()
+    n_threads, n_reqs = 4, 12
+    # pre-draw every thread's workload from the one seeded stream
+    work = [[rng.randn(int(rng.randint(1, 4)), TINY.z_dim)
+             .astype(np.float32) for _ in range(n_reqs)]
+            for _ in range(n_threads)]
+
+    def submitter(tid):
+        try:
+            mine = []
+            for z in work[tid]:
+                rid = eng.submit(z)
+                with reg:
+                    payloads[rid] = z
+                mine.append(rid)
+            for rid in reversed(mine):             # out-of-order collect
+                out = eng.collect(rid, timeout_s=120)
+                with reg:
+                    results[rid] = out
+        except Exception as e:                      # pragma: no cover
+            errors.append((tid, e))
+
+    def drainer():
+        try:
+            for _ in range(20):                     # mid-stream drains
+                eng.drain()
+                time.sleep(0.001)
+        except Exception as e:                      # pragma: no cover
+            errors.append(("drain", e))
+
+    threads = ([threading.Thread(target=submitter, args=(t,))
+                for t in range(n_threads)]
+               + [threading.Thread(target=drainer)])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+        assert not t.is_alive(), "stress thread hung"
+    assert not errors, errors
+
+    # exactly once: every ticket delivered, with its own rows
+    assert len(results) == n_threads * n_reqs
+    assert sorted(results) == sorted(payloads)
+    for rid, out in results.items():
+        assert out.shape[0] == payloads[rid].shape[0]
+    # nothing left behind in any queue state
+    assert eng._pending == [] and not eng._inflight
+    assert eng._results == {} and eng._failures == {}
+    assert (eng.stats["images"] - images_before
+            == sum(z.shape[0] for z in payloads.values()))
+    # double-collect is typed, not a hang or a silent None
+    some_rid = next(iter(results))
+    with pytest.raises(KeyError, match="already collected"):
+        eng.collect(some_rid)
+    # spot-check numerics: the coalesced, interleaved path served real
+    # images (vs the reverse_loop oracle), not just the right shapes
+    for rid in sorted(results)[:3]:
+        ref = np.asarray(generator_apply(
+            params, TINY, jnp.asarray(payloads[rid]),
+            backend="reverse_loop"))
+        np.testing.assert_allclose(results[rid], ref, rtol=2e-3, atol=2e-3)
+
+
+def test_shed_resolves_ticket_typed(tmp_cache, tiny_setup):
+    """Load-shedding a pending ticket resolves it (`AdmissionRejected`),
+    never silently drops it; other tickets are untouched and shedding a
+    non-pending ticket reports False."""
+    params, z, ref = tiny_setup
+    eng = _engine(params)
+    r1, r2 = eng.submit(z[:2]), eng.submit(z[2:])
+    assert eng.shed(r1, "overload drill")
+    assert eng.fault_stats["shed"] == 1
+    with pytest.raises(AdmissionRejected, match="overload drill") as ei:
+        eng.collect(r1)
+    assert ei.value.stage == "shed"
+    np.testing.assert_allclose(eng.collect(r2), ref[2:],
+                               rtol=2e-3, atol=2e-3)
+    assert not eng.shed(r2)            # already resolved
+    assert not eng.shed(10_000)        # never issued
+
+
+def test_collect_timeout_on_lost_ticket(tmp_cache, tiny_setup):
+    """A ticket that vanished without a result (dispatch lost, e.g. a
+    remesh dropped it) raises `DeadlineExceeded` at ``timeout_s`` instead
+    of the pre-fix unbounded block; without a timeout the caller gets the
+    already-collected KeyError diagnosis immediately."""
+    params, z, _ = tiny_setup
+    eng = _engine(params)
+    rid = eng.submit(z[:1])
+    with eng._qlock:                   # simulate a lost dispatch
+        eng._pending.clear()
+    t0 = time.monotonic()
+    with pytest.raises(DeadlineExceeded, match="did not resolve"):
+        eng.collect(rid, timeout_s=0.2)
+    assert 0.15 < time.monotonic() - t0 < 5.0
+    with pytest.raises(KeyError, match="already collected"):
+        eng.collect(rid)
+
+
+def test_collect_timeout_while_queue_busy(tmp_cache, tiny_setup):
+    """`collect(timeout_s=)` honors the bound even when another thread's
+    drain holds the queue: it fails typed at expiry rather than queueing
+    behind an arbitrarily long drain."""
+    params, z, _ = tiny_setup
+    eng = _engine(params)
+    rid = eng.submit(z[:1])
+    assert eng._drain_lock.acquire(timeout=1.0)    # a "busy" drain
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(DeadlineExceeded, match="queue busy"):
+            eng.collect(rid, timeout_s=0.15)
+        assert time.monotonic() - t0 < 5.0
+    finally:
+        eng._drain_lock.release()
+    # once the long drain releases, the ticket still serves
+    out = eng.collect(rid, timeout_s=120)
+    assert out.shape[0] == 1
