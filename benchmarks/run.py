@@ -24,6 +24,13 @@ def main() -> None:
               "vs fixed tiles")
         print("=" * 72)
         bench_deconv.main(smoke=True)
+        # the artifact CI archives must validate: every section present,
+        # required row keys intact, no NaN/inf leaked by a timing division
+        from repro.analysis.check import check_bench_json
+
+        report = check_bench_json("BENCH_deconv.json")
+        print(report.render(strict=True))
+        report.raise_if_failed(strict=True)
         return
 
     print("=" * 72)

@@ -9,7 +9,11 @@ run-to-run-variation measurement.
 
 ``--plan-json`` writes the engine's largest-bucket NetworkPlan to disk —
 the artifact a deployment pins next to its checkpoint and reloads with
-``NetworkPlan.load`` to serve exactly the validated configuration.
+``NetworkPlan.load`` to serve exactly the validated configuration.  If
+the file already exists it is instead *loaded*: the static plan DRC
+(`repro.analysis.check`) runs before the engine is built, and a plan
+that fails prints the rule-by-rule report and exits 2 instead of
+tracebacking out of the middle of engine setup.
 
 ``--async`` routes the stream through the SLO-aware `AsyncServeFrontend`
 instead of the raw engine: requests carry a per-tenant deadline
@@ -18,6 +22,8 @@ the scheduler downgrades fp32 requests onto the pinned int8 chain when
 that is the only way to hold the SLO.
 """
 import argparse
+import os
+import sys
 import time
 
 import jax
@@ -87,6 +93,22 @@ def main():
     if args.use_async:
         run_async(cfg, params, args)
         return
+    # a pre-existing --plan-json is a pinned deployment artifact: DRC it
+    # statically and serve it; a fresh path is written at the end instead
+    pinned = None
+    if args.plan_json and os.path.exists(args.plan_json):
+        from repro.analysis.check import check_plan_json
+        from repro.plan import NetworkPlan
+
+        report = check_plan_json(args.plan_json)
+        if not report.ok():
+            print(f"pinned plan {args.plan_json} failed design-rule check:")
+            print(report.render())
+            sys.exit(2)
+        pinned = NetworkPlan.load(args.plan_json)
+        print(f"pinned plan {pinned.stable_hash()} <- {args.plan_json} "
+              f"(DRC clean: {len(report.rules_run)} rules)")
+
     # plan/execute engine: one EngineConfig instead of a kwarg pile, one
     # pinned NetworkPlan + compiled executable per power-of-two bucket,
     # pre-compiled by warmup; mixed request sizes never recompile.
@@ -94,7 +116,7 @@ def main():
         EngineConfig(model=cfg, backend=args.backend,
                      precision=args.precision, max_batch=args.batch,
                      warmup=True, calib_batch=32),
-        params)
+        params, plan=pinned)
 
     ops_per_img = sum(g.ops for g in cfg.geometries())
     rng = np.random.RandomState(0)
@@ -117,7 +139,7 @@ def main():
           f"{1000*lat.mean():.2f} ms/image, last images {imgs.shape}, "
           f"{eng.total_compiles} compiles / {eng.plan_stats['builds']} plan "
           f"builds over {len(eng.buckets)} buckets")
-    if args.plan_json:
+    if args.plan_json and pinned is None:
         plan = eng.plans[eng.max_bucket]
         plan.to_json(args.plan_json)
         print(f"pinned plan {plan.stable_hash()} -> {args.plan_json}")

@@ -1,0 +1,4 @@
+"""Offline analysis: HLO cost accounting, roofline reports, and the
+static verification subsystem (`repro.analysis.check`) that design-rule
+checks pinned plans and lints the threaded serve stack without executing
+anything."""

@@ -1,0 +1,33 @@
+"""Static verification subsystem: plan DRC + concurrency lint.
+
+The FPGA flow in the source paper signs off resource budgets and timing
+*before* synthesis; this package is the same discipline for the TPU
+stack.  Two passes, one chassis:
+
+* ``plan_drc`` — design-rule check over ``NetworkPlan``/``DeconvPlan``
+  (VMEM budgets, tile/halo alignment, int8 scale chaining, sparse
+  digests, bucket/mesh alignment, epilogue legality, roofline sanity)
+  without executing a single kernel.
+* ``concurrency`` — AST lock-discipline lint over the threaded serve
+  stack (guarded-attribute learning, lock-order inversions, callbacks
+  under locks, check-then-act races).
+* ``bench_schema`` — schema + NaN validation for ``BENCH_deconv.json``.
+
+CLI: ``python -m repro.analysis.check`` (see ``--help``); the serving
+engine runs the plan DRC on every pinned plan at load and rejects bad
+ones with a typed :class:`PlanCheckError` before any compile.
+"""
+from .bench_schema import check_bench_doc, check_bench_json
+from .concurrency import (Allowlist, DEFAULT_ALLOWLIST,
+                          default_target_files, lint_file, lint_files)
+from .plan_drc import check_network_plan, check_plan_json
+from .rules import (CheckReport, PlanCheckError, PlanRuleViolation,
+                    Severity, registered_rules)
+
+__all__ = [
+    "Allowlist", "CheckReport", "DEFAULT_ALLOWLIST", "PlanCheckError",
+    "PlanRuleViolation", "Severity", "check_bench_doc",
+    "check_bench_json", "check_network_plan", "check_plan_json",
+    "default_target_files", "lint_file", "lint_files",
+    "registered_rules",
+]

@@ -1,0 +1,138 @@
+"""Benchmark-artifact validation: `BENCH_deconv.json` schema + NaN scan.
+
+`benchmarks/run.py --smoke` regenerates `BENCH_deconv.json` on every CI
+run; this pass (same rule-engine plumbing as the plan DRC) makes the
+smoke gate fail loudly when a refactor drops a section, renames a row
+key, or lets a divide-by-zero leak a NaN into the artifact — all of
+which previously surfaced only when a human read the report."""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Any, List
+
+from .rules import CheckReport, Severity, rule
+
+#: {section: container type}.  ``table2`` may legitimately be an empty
+#: list (smoke mode skips the paper-table timing sweep).
+SECTIONS = {
+    "table2": list, "traffic": list, "autotune": list, "scaling": list,
+    "batch_sweep": list, "serving": dict, "sharded": dict, "quant": list,
+    "plan": list, "degraded": dict, "slo": dict,
+}
+
+#: per-row required keys for the sections the smoke run always fills
+ROW_KEYS = {
+    "traffic": ("net", "layer", "in_bytes_per_tile", "halo_total_bytes",
+                "full_image_total_bytes", "traffic_reduction"),
+    "autotune": ("net", "layer", "fixed_tiles", "tuned_tiles",
+                 "fixed_us", "tuned_us"),
+    "scaling": ("in_hw", "out_hw", "halo_in_bytes_per_tile",
+                "full_in_bytes_per_tile", "n_tiles"),
+}
+
+
+@rule("bench.sections",
+      "BENCH_deconv.json is missing a section or has the wrong shape")
+def check_sections(r, doc):
+    out = []
+    if not isinstance(doc, dict):
+        return [r.violation(
+            f"top level must be an object, got {type(doc).__name__}",
+            fix_hint="regenerate with benchmarks/run.py")]
+    for name, typ in SECTIONS.items():
+        if name not in doc:
+            out.append(r.violation(
+                f"section {name!r} missing",
+                location=name,
+                fix_hint="regenerate with benchmarks/run.py (write_json "
+                         "emits every section, empty or not)"))
+        elif not isinstance(doc[name], typ):
+            out.append(r.violation(
+                f"section {name!r} should be a {typ.__name__}, got "
+                f"{type(doc[name]).__name__}", location=name))
+    for name in doc:
+        if name not in SECTIONS:
+            out.append(r.violation(
+                f"unknown section {name!r}", location=name,
+                severity=Severity.WARNING,
+                fix_hint="add it to SECTIONS in bench_schema.py if it is "
+                         "a new deliberate artifact"))
+    return out
+
+
+@rule("bench.keys", "a benchmark row is missing a required key")
+def check_row_keys(r, doc):
+    out = []
+    if not isinstance(doc, dict):
+        return out
+    for section, keys in ROW_KEYS.items():
+        rows = doc.get(section)
+        if not isinstance(rows, list):
+            continue
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict):
+                out.append(r.violation(
+                    f"row {i} is not an object",
+                    location=f"{section}[{i}]"))
+                continue
+            missing = [k for k in keys if k not in row]
+            if missing:
+                out.append(r.violation(
+                    f"row {i} missing key(s) {', '.join(missing)}",
+                    location=f"{section}[{i}]",
+                    fix_hint="a rename in bench_deconv.py must update "
+                             "ROW_KEYS (and the README tables) with it"))
+    return out
+
+
+@rule("bench.nan", "a benchmark value is NaN or infinite")
+def check_finite(r, doc):
+    out = []
+
+    def scan(node: Any, path: str) -> None:
+        if isinstance(node, float) and not math.isfinite(node):
+            out.append(r.violation(
+                f"non-finite value {node!r}", location=path,
+                fix_hint="guard the producing division (bench rows use "
+                         "max(denom, eps)) or drop the row"))
+        elif isinstance(node, dict):
+            for k, v in node.items():
+                scan(v, f"{path}.{k}")
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                scan(v, f"{path}[{i}]")
+
+    scan(doc, "$")
+    return out
+
+
+BENCH_RULES = ("bench.sections", "bench.keys", "bench.nan")
+
+
+def check_bench_doc(doc, name: str = "BENCH_deconv.json") -> CheckReport:
+    report = CheckReport(f"bench-schema:{name}")
+    report.rules_run += list(BENCH_RULES)
+    report.extend(check_sections(doc))
+    report.extend(check_row_keys(doc))
+    report.extend(check_finite(doc))
+    return report
+
+
+def check_bench_json(path: str) -> CheckReport:
+    """Validate a benchmark artifact on disk.  Unreadable/unparsable
+    files report through ``bench.sections`` rather than raising — the
+    smoke gate wants a report either way."""
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        report = CheckReport(f"bench-schema:{name}")
+        report.rules_run += list(BENCH_RULES)
+        report.extend([check_sections.rule.violation(
+            f"cannot load {path}: {e}",
+            fix_hint="regenerate with benchmarks/run.py --smoke")])
+        return report
+    return check_bench_doc(doc, name)

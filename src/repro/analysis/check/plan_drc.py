@@ -1,0 +1,461 @@
+"""Pass 1 — plan design-rule check (DRC) over pinned execution plans.
+
+The paper's FPGA toolchain proves DSP/BRAM/LUT budgets and timing
+*before* a bitstream exists; a `plan.NetworkPlan` is this repo's
+bitstream analogue, and until now its invariants were only checked by
+executing kernels.  This pass verifies a plan (in memory or pinned as
+JSON) **without executing anything**:
+
+* ``drc.vmem_budget``    — every resolved `TileChoice`'s
+  `kernel_vmem_bytes` fits the device VMEM budget (BRAM fit);
+* ``drc.tile_alignment`` — stride-aligned spatial tiles, positive tile
+  factors, `padded_geometry()` / Eq. 5 halo geometry resolvable and
+  internally consistent;
+* ``drc.geometry_chain`` — layer i's output extents/channels feed
+  layer i+1's input exactly;
+* ``drc.scale_chain``    — the int8 requant chain: layer i's
+  ``out_scale`` must equal layer i+1's input quant scale, epilogue
+  widths must follow the int8-in-HBM convention (intermediates int8,
+  the last layer emits f32);
+* ``drc.sparse_digest``  — zero-skip schedule content hashes match the
+  serialized tables and (when params are supplied) the weights that
+  will actually be served;
+* ``drc.bucket_mesh``    — per-layer batches agree with the network
+  batch, batch tiles fit the batch, and the implied global bucket
+  aligns to the mesh device count / engine bucket set;
+* ``drc.epilogue``       — fused activation / output-width legality;
+* ``drc.roofline``       — modeled attainable throughput positive and
+  traffic estimates internally consistent;
+* ``drc.backend``        — backend/precision/dtype combinations the
+  executors actually implement;
+* ``drc.schema``         — a JSON document that cannot even be loaded
+  (stale schema, tampered content hash) reports as a violation instead
+  of a traceback.
+
+Entry points: `check_network_plan` (in-memory), `check_plan_json`
+(pinned artifact).  `DcnnServeEngine.from_config` runs
+`check_network_plan` at load and rejects on ERROR with a typed
+`PlanCheckError` — the load-time gate that turns a mid-serve crash into
+an offline report.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ...core.dse import TPU_V5E, Device
+from ...core.tiling import kernel_vmem_bytes
+from .rules import CheckReport, PlanRuleViolation, Severity, rule
+
+KNOWN_BACKENDS = ("pallas", "pallas_sparse", "reverse_loop", "xla")
+TILED_BACKENDS = ("pallas", "pallas_sparse")
+KNOWN_ACTIVATIONS = (None, "relu", "tanh")
+_REL_TOL = 1e-9
+
+
+def _close(a: float, b: float) -> bool:
+    return math.isclose(a, b, rel_tol=_REL_TOL, abs_tol=0.0)
+
+
+# ---------------------------------------------------------------------------
+# per-rule checks (each returns a violation list; the registry gives them
+# stable ids the mutation-fixture tests assert on)
+# ---------------------------------------------------------------------------
+@rule("drc.backend", "backend/precision/dtype combination is executable")
+def check_backend(r, plan) -> List[PlanRuleViolation]:
+    out: List[PlanRuleViolation] = []
+    if plan.backend not in KNOWN_BACKENDS:
+        out.append(r.violation(
+            f"unknown backend {plan.backend!r}",
+            fix_hint=f"one of {KNOWN_BACKENDS}"))
+    if plan.precision == "int8" and plan.backend != "pallas":
+        out.append(r.violation(
+            f"precision='int8' with backend={plan.backend!r}: only the "
+            "dense Pallas kernel has a quantized variant",
+            fix_hint="re-plan with backend='pallas' or precision='fp32'"))
+    want_dtype = "int8" if plan.precision == "int8" else None
+    for i, l in enumerate(plan.layers):
+        if l.backend != plan.backend:
+            out.append(r.violation(
+                f"layer backend {l.backend!r} != network backend "
+                f"{plan.backend!r}", layer=i,
+                fix_hint="re-plan; layers cannot mix backends"))
+        if want_dtype is not None and l.dtype != want_dtype:
+            out.append(r.violation(
+                f"int8 plan streams dtype {l.dtype!r}", layer=i,
+                fix_hint="int8 chains stream int8 between layers"))
+        if plan.backend in TILED_BACKENDS and l.tiles is None:
+            out.append(r.violation(
+                "tiled backend but no resolved TileChoice", layer=i,
+                fix_hint="re-plan with autotune (or fallback) tiles"))
+    return out
+
+
+@rule("drc.vmem_budget",
+      "every resolved TileChoice fits the device VMEM budget")
+def check_vmem_budget(r, plan, device: Device = TPU_V5E
+                      ) -> List[PlanRuleViolation]:
+    out: List[PlanRuleViolation] = []
+    for i, l in enumerate(plan.layers):
+        t = l.tiles
+        if t is None:
+            continue
+        try:
+            need = kernel_vmem_bytes(
+                l.geometry, t.t_oh, t.t_ow, t.t_ci, t.t_co, l.dtype_bytes,
+                t_n=t.t_n, out_dtype_bytes=l.out_dtype_bytes)
+        except Exception:
+            continue  # unresolvable tiling: drc.tile_alignment reports it
+        if need > device.onchip_bytes:
+            out.append(r.violation(
+                f"tile ({t.t_oh}x{t.t_ow}/{t.t_ci}/{t.t_co}/n{t.t_n}) "
+                f"needs {need} B of VMEM against the {device.name} "
+                f"budget of {device.onchip_bytes} B",
+                layer=i,
+                fix_hint="re-run the autotuner for this device; a plan "
+                         "pinned for a larger-VMEM part cannot run here"))
+    return out
+
+
+@rule("drc.tile_alignment",
+      "tile factors stride-aligned, positive, and halo geometry resolvable")
+def check_tile_alignment(r, plan) -> List[PlanRuleViolation]:
+    out: List[PlanRuleViolation] = []
+    for i, l in enumerate(plan.layers):
+        t = l.tiles
+        if t is None:
+            continue
+        g = l.geometry
+        for name in ("t_oh", "t_ow", "t_ci", "t_co", "t_n"):
+            v = getattr(t, name)
+            if not isinstance(v, int) or v < 1:
+                out.append(r.violation(
+                    f"{name}={v!r} is not a positive integer", layer=i,
+                    fix_hint="re-plan; tile factors are positive ints"))
+        if t.t_oh % g.stride or t.t_ow % g.stride:
+            out.append(r.violation(
+                f"spatial tile {t.t_oh}x{t.t_ow} is not stride-aligned "
+                f"(S={g.stride}): the Eq. 5 constant-extent window (and "
+                "uniform per-tile phase structure) requires S | T_OH",
+                layer=i,
+                fix_hint="round the spatial tile to a stride multiple"))
+            continue  # padded_geometry asserts on misaligned tiles
+        try:
+            (oh, ow, ohp, owp, pad_l, pad_rh, pad_rw, cip, cop, t_n, np_
+             ) = l.padded_geometry()
+        except Exception as e:
+            out.append(r.violation(
+                f"padded_geometry() unresolvable: {e}", layer=i,
+                fix_hint="the pinned tiles do not form a legal halo "
+                         "grid for this geometry; re-plan"))
+            continue
+        if (oh, ow) != (g.out_h, g.out_w):
+            out.append(r.violation(
+                f"halo geometry disagrees with the layer geometry: "
+                f"padded grid solves {oh}x{ow}, layer says "
+                f"{g.out_h}x{g.out_w}", layer=i,
+                fix_hint="geometry and tiles were pinned from different "
+                         "configs; re-plan"))
+        if ohp % t.t_oh or owp % t.t_ow:
+            out.append(r.violation(
+                f"padded output {ohp}x{owp} is not tiled exactly by "
+                f"{t.t_oh}x{t.t_ow}", layer=i,
+                fix_hint="re-plan; the grid must cover the padded output "
+                         "in whole tiles"))
+        if cip % t.t_ci or cop % t.t_co:
+            out.append(r.violation(
+                f"padded channels ({cip}, {cop}) not divisible by the "
+                f"channel tiles ({t.t_ci}, {t.t_co})", layer=i,
+                fix_hint="re-plan; channel padding must be tile-exact"))
+        if pad_l < 0 or pad_rh < 0 or pad_rw < 0:
+            out.append(r.violation(
+                f"negative halo padding ({pad_l}, {pad_rh}, {pad_rw})",
+                layer=i, fix_hint="re-plan against this geometry"))
+    return out
+
+
+@rule("drc.geometry_chain",
+      "layer i's output feeds layer i+1's input exactly")
+def check_geometry_chain(r, plan) -> List[PlanRuleViolation]:
+    out: List[PlanRuleViolation] = []
+    for i in range(len(plan.layers) - 1):
+        g, nxt = plan.layers[i].geometry, plan.layers[i + 1].geometry
+        if (g.out_h, g.out_w, g.c_out) != (nxt.in_h, nxt.in_w, nxt.c_in):
+            out.append(r.violation(
+                f"layer {i} emits {g.out_h}x{g.out_w}x{g.c_out} but "
+                f"layer {i + 1} expects {nxt.in_h}x{nxt.in_w}x{nxt.c_in}",
+                layer=i + 1,
+                fix_hint="the layer list was edited after pinning; "
+                         "re-plan from the network config"))
+    return out
+
+
+@rule("drc.scale_chain",
+      "int8 requant chain: out_scale[i] == input scale of layer i+1")
+def check_scale_chain(r, plan) -> List[PlanRuleViolation]:
+    out: List[PlanRuleViolation] = []
+    layers = plan.layers
+    if plan.precision != "int8":
+        for i, l in enumerate(layers):
+            if l.quant is not None or l.out_scale is not None:
+                out.append(r.violation(
+                    f"fp32 plan carries quantization state "
+                    f"(quant={l.quant is not None}, "
+                    f"out_scale={l.out_scale})", layer=i,
+                    fix_hint="re-plan at precision='int8' or drop the "
+                             "stale scales"))
+        return out
+    last = len(layers) - 1
+    for i, l in enumerate(layers):
+        if l.quant is None:
+            out.append(r.violation(
+                "int8 layer has no calibrated LayerQuant scales",
+                layer=i, fix_hint="re-calibrate and re-plan"))
+            continue
+        if i < last:
+            nxt = layers[i + 1].quant
+            if l.out_scale is None:
+                out.append(r.violation(
+                    "intermediate int8 layer has no requant out_scale: "
+                    "its epilogue could not re-quantize into the next "
+                    "layer's range", layer=i,
+                    fix_hint="re-plan; out_scale must be layer "
+                             f"{i + 1}'s input scale"))
+            elif nxt is not None and not _close(l.out_scale, nxt.x_scale):
+                out.append(r.violation(
+                    f"requant chain broken: layer {i} re-quantizes at "
+                    f"out_scale={l.out_scale!r} but layer {i + 1} was "
+                    f"calibrated for x_scale={nxt.x_scale!r} — the "
+                    "served images would be silently wrong", layer=i,
+                    fix_hint="the plan mixes two calibrations; re-plan "
+                             "from one QuantConfig"))
+            if l.out_dtype_bytes is not None:
+                out.append(r.violation(
+                    f"intermediate int8 layer widens its output to "
+                    f"{l.out_dtype_bytes} B: activations must stay int8 "
+                    "in HBM between layers", layer=i,
+                    fix_hint="only the last layer emits f32 "
+                             "(out_dtype_bytes=4)"))
+        else:
+            if l.out_scale is not None:
+                out.append(r.violation(
+                    f"last int8 layer has out_scale={l.out_scale!r}: "
+                    "there is no next layer to re-quantize into",
+                    layer=i, fix_hint="the final epilogue dequantizes "
+                                      "to f32; out_scale must be None"))
+            if l.out_dtype_bytes != 4:
+                out.append(r.violation(
+                    f"last int8 layer emits out_dtype_bytes="
+                    f"{l.out_dtype_bytes!r}; the chain's final epilogue "
+                    "writes f32 images (4 B)", layer=i,
+                    fix_hint="re-plan; autotuned tiles priced for the "
+                             "wrong output width are also stale"))
+    return out
+
+
+@rule("drc.sparse_digest",
+      "zero-skip schedule digests match tables and served weights")
+def check_sparse_digest(r, plan, params=None) -> List[PlanRuleViolation]:
+    out: List[PlanRuleViolation] = []
+    if plan.backend != "pallas_sparse":
+        return out
+    from ...plan.deconv_plan import _sparse_digest
+
+    for i, l in enumerate(plan.layers):
+        if l.sparse_digest is None:
+            out.append(r.violation(
+                "pallas_sparse layer has no pinned schedule digest: "
+                "staleness against the served weights is unverifiable",
+                layer=i, severity=Severity.WARNING,
+                fix_hint="re-plan with the pruned weights so the "
+                         "schedule is content-hashed"))
+            continue
+        if l.sparse_tables is not None:
+            got = _sparse_digest(l.sparse_tables)
+            if got != l.sparse_digest:
+                out.append(r.violation(
+                    f"serialized zero-skip tables hash to {got} but the "
+                    f"plan pinned {l.sparse_digest}", layer=i,
+                    fix_hint="the tables were edited after pinning; "
+                             "re-plan from the weights"))
+        if params is not None and l.tiles is not None:
+            from ...kernels.deconv2d_sparse import make_sparse_plan
+
+            g = l.geometry
+            want = _sparse_digest(make_sparse_plan(
+                np.asarray(params[f"l{i}"]["w"]), g.stride, g.padding,
+                l.tiles.t_ci, l.tiles.t_co))
+            if want != l.sparse_digest:
+                out.append(r.violation(
+                    f"pinned schedule ({l.sparse_digest}) does not match "
+                    f"the schedule of the weights being served ({want}): "
+                    "a stale schedule silently skips now-nonzero blocks",
+                    layer=i,
+                    fix_hint="the checkpoint was re-pruned after the "
+                             "plan was pinned; re-plan against it"))
+    return out
+
+
+@rule("drc.bucket_mesh",
+      "batches consistent across layers and aligned to the mesh")
+def check_bucket_mesh(r, plan, n_devices: int = 1,
+                      buckets: Optional[Sequence[int]] = None
+                      ) -> List[PlanRuleViolation]:
+    out: List[PlanRuleViolation] = []
+    if plan.batch < 1:
+        out.append(r.violation(
+            f"network batch {plan.batch} is not positive",
+            fix_hint="plans are fitted to a concrete serving bucket"))
+        return out
+    for i, l in enumerate(plan.layers):
+        if l.batch != plan.batch:
+            out.append(r.violation(
+                f"layer batch {l.batch} != network batch {plan.batch}: "
+                "the layer's tiles were fitted to a different bucket",
+                layer=i, fix_hint="re-plan; all layers of one plan "
+                                  "serve one per-device sub-batch"))
+        if l.tiles is not None and l.tiles.t_n > l.batch:
+            out.append(r.violation(
+                f"batch tile t_n={l.tiles.t_n} exceeds the layer batch "
+                f"{l.batch}: the grid would be scored with MXU rows the "
+                "clamped kernel can never fill", layer=i,
+                fix_hint="re-plan; the autotuner never emits t_n > "
+                         "batch, so this plan was edited or corrupted"))
+    if n_devices > 1:
+        bucket = plan.batch * n_devices
+        if buckets is not None and bucket not in tuple(buckets):
+            out.append(r.violation(
+                f"per-device batch {plan.batch} x {n_devices} device(s) "
+                f"implies global bucket {bucket}, which is not in the "
+                f"engine bucket set {tuple(buckets)}",
+                fix_hint="re-plan for a shard-aligned bucket "
+                         "(shard_aligned_buckets rounds buckets to "
+                         "device-count multiples)"))
+    return out
+
+
+@rule("drc.epilogue", "fused epilogue activation/width legality")
+def check_epilogue(r, plan) -> List[PlanRuleViolation]:
+    out: List[PlanRuleViolation] = []
+    for i, l in enumerate(plan.layers):
+        if l.activation not in KNOWN_ACTIVATIONS:
+            out.append(r.violation(
+                f"unknown fused activation {l.activation!r}", layer=i,
+                fix_hint=f"kernels implement {KNOWN_ACTIVATIONS}"))
+        if l.out_dtype_bytes not in (None, 1, 2, 4):
+            out.append(r.violation(
+                f"out_dtype_bytes={l.out_dtype_bytes!r} is not a "
+                "supported epilogue width", layer=i,
+                fix_hint="None (same as stream) or 1/2/4 bytes"))
+    return out
+
+
+@rule("drc.roofline",
+      "modeled attainable throughput positive, traffic self-consistent")
+def check_roofline(r, plan, device: Device = TPU_V5E
+                   ) -> List[PlanRuleViolation]:
+    out: List[PlanRuleViolation] = []
+    try:
+        points = plan.modeled_attainable(device)
+        traffic = plan.traffic_report()
+    except Exception as e:
+        return [r.violation(
+            f"roofline/traffic model unevaluable: {e}",
+            fix_hint="the pinned tiles do not form a modelable grid; "
+                     "re-plan")]
+    for i, pt in points.items():
+        if not (pt.attainable_ops > 0.0 and math.isfinite(
+                pt.attainable_ops)):
+            out.append(r.violation(
+                f"modeled attainable throughput is "
+                f"{pt.attainable_ops!r} ops/s", layer=i,
+                fix_hint="a zero/NaN roofline means degenerate tiles or "
+                         "geometry; re-plan"))
+        if pt.ctc <= 0.0 or not math.isfinite(pt.ctc):
+            out.append(r.violation(
+                f"computation-to-communication ratio is {pt.ctc!r}",
+                layer=i, fix_hint="traffic model degenerate; re-plan"))
+    for i, t in traffic.items():
+        parts = t.n_tiles * (t.n_ci_steps * (t.in_bytes_per_tile
+                                             + t.w_bytes_per_tile)
+                             + t.out_bytes_per_tile)
+        if t.total_bytes != parts:
+            out.append(r.violation(
+                f"traffic estimate inconsistent: total_bytes="
+                f"{t.total_bytes} but components sum to {parts}",
+                layer=i, fix_hint="model drift between plan fields; "
+                                  "re-plan with this code version"))
+        if min(t.n_tiles, t.n_ci_steps, t.in_bytes_per_tile,
+               t.w_bytes_per_tile, t.out_bytes_per_tile) <= 0:
+            out.append(r.violation(
+                "traffic estimate has non-positive components", layer=i,
+                fix_hint="re-plan; every tile moves some bytes"))
+    return out
+
+
+# the schema rule never runs over a live plan — it exists so an unloadable
+# JSON document reports through the same chassis as every other violation
+@rule("drc.schema", "pinned plan JSON loads under the current schema")
+def check_schema(r, error: Exception,
+                 location: Optional[str] = None) -> List[PlanRuleViolation]:
+    return [r.violation(
+        f"plan document rejected at load: {error}", location=location,
+        fix_hint="re-pin the plan with this code version (stale schema "
+                 "or post-pinning edits are never executed)")]
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+def check_network_plan(
+    plan,
+    *,
+    device: Device = TPU_V5E,
+    n_devices: int = 1,
+    buckets: Optional[Sequence[int]] = None,
+    params: Optional[Dict[str, Any]] = None,
+    name: Optional[str] = None,
+) -> CheckReport:
+    """Run every plan DRC rule over a `plan.NetworkPlan`.
+
+    ``device`` sets the VMEM budget / roofline constants; ``n_devices``
+    and ``buckets`` enable the mesh-alignment rule (the serving engine
+    passes its own); ``params`` enables the weights-vs-digest staleness
+    check for pallas_sparse plans.  Nothing is executed or compiled."""
+    report = CheckReport(name or f"plan-drc:{plan.name}")
+    report.extend(check_backend(plan))
+    report.extend(check_vmem_budget(plan, device))
+    report.extend(check_tile_alignment(plan))
+    report.extend(check_geometry_chain(plan))
+    report.extend(check_scale_chain(plan))
+    report.extend(check_sparse_digest(plan, params))
+    report.extend(check_bucket_mesh(plan, n_devices, buckets))
+    report.extend(check_epilogue(plan))
+    report.extend(check_roofline(plan, device))
+    report.rules_run += [
+        "drc.backend", "drc.vmem_budget", "drc.tile_alignment",
+        "drc.geometry_chain", "drc.scale_chain", "drc.sparse_digest",
+        "drc.bucket_mesh", "drc.epilogue", "drc.roofline",
+    ]
+    return report
+
+
+def check_plan_json(path: str, **kwargs) -> CheckReport:
+    """DRC a pinned plan artifact.  A document that cannot even load
+    (stale schema, tampered content hash, not a plan) reports as a
+    ``drc.schema`` violation instead of raising — the CLI and the
+    example driver print rule-by-rule either way."""
+    from ...plan import NetworkPlan
+    from ...plan.deconv_plan import PlanSchemaError
+
+    try:
+        plan = NetworkPlan.load(path)
+    except (OSError, PlanSchemaError, KeyError, TypeError,
+            ValueError) as e:
+        report = CheckReport(f"plan-drc:{path}")
+        report.extend(check_schema(e, location=path))
+        report.rules_run.append("drc.schema")
+        return report
+    return check_network_plan(plan, name=f"plan-drc:{path}", **kwargs)

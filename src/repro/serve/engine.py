@@ -438,6 +438,15 @@ class DcnnServeEngine:
         # bucket, never per call (bench pins this)
         self.plan_stats = {"builds": 0, "build_seconds": 0.0}
         if plan is not None:
+            # static DRC before anything compiles: a pinned plan that
+            # drifted from the code (stale tiles, broken requant chain,
+            # foreign mesh) is rejected here with the rule-by-rule
+            # report, not discovered as a mid-serve crash.  Weight-digest
+            # checking already happened via verify_sparse_tables above.
+            from ..analysis.check.plan_drc import check_network_plan
+            check_network_plan(
+                plan, n_devices=self.n_devices,
+                buckets=self.buckets).raise_if_failed()
             seeded = [b for b in self.buckets
                       if self.shard_batch(b) == plan.batch]
             if not seeded:
@@ -547,8 +556,10 @@ class DcnnServeEngine:
         # heartbeat callback: a dispatched call has been silent past the
         # configured timeout.  Record it (the Heartbeat catches callback
         # errors, but there is nothing to raise into — the stalled call
-        # owns the thread).
-        self.fault_stats["heartbeat_fires"] += 1
+        # owns the thread).  This runs on the watcher thread, so the
+        # counter bump takes _qlock like every other fault_stats write.
+        with self._qlock:
+            self.fault_stats["heartbeat_fires"] += 1
 
     def close(self) -> None:
         """Release the stall-watcher thread (no-op without a heartbeat)."""
@@ -585,12 +596,14 @@ class DcnnServeEngine:
                 y = np.asarray(fn(self.params, jnp.asarray(chunk)))
                 dt = time.perf_counter() - t0
             except TransientCallError as e:
-                self.fault_stats["transient_failures"] += 1
+                with self._qlock:
+                    self.fault_stats["transient_failures"] += 1
                 if attempt + 1 >= attempts:
                     raise EngineDegraded(
                         f"bucket-{bucket} call failed {attempts} "
                         "time(s); retries exhausted") from e
-                self.fault_stats["retries"] += 1
+                with self._qlock:
+                    self.fault_stats["retries"] += 1
                 time.sleep(self.config.retry_backoff_s * (2 ** attempt))
                 continue
             finally:
@@ -607,7 +620,8 @@ class DcnnServeEngine:
                         factor=self.config.straggler_factor,
                         warmup_steps=self.config.straggler_warmup))
                 if mon.observe(self._dispatches, dt):
-                    self.fault_stats["stragglers"] += 1
+                    with self._qlock:
+                        self.fault_stats["stragglers"] += 1
             return y, dt, steady, retried
 
     def _remesh(self, keep: int) -> None:
@@ -665,7 +679,7 @@ class DcnnServeEngine:
         # remesh event (observability) and start the accounting fresh.
         stats_before = {b: dict(s) for b, s in self.bucket_stats.items()}
         self.bucket_stats = {}
-        self.fault_stats["remesh_events"].append({
+        event = {
             "bucket_stats_before": stats_before,
             "devices_before": devices_before,
             "devices_after": self.n_devices,
@@ -674,7 +688,9 @@ class DcnnServeEngine:
             "plan_hashes_after": after,
             "plan_hash_matches": matches,
             "seconds": time.perf_counter() - t0,
-        })
+        }
+        with self._qlock:
+            self.fault_stats["remesh_events"].append(event)
         if not all(matches.values()):
             raise EngineDegraded(
                 f"post-remesh plan hash mismatch {matches}: the "

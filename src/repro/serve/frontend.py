@@ -180,9 +180,13 @@ class AsyncServeFrontend:
         return self
 
     def start(self) -> None:
-        if not self._started:
+        # check-and-set under _cond: two racing start() calls must not
+        # both see _started False (Thread.start raises on the loser)
+        with self._cond:
+            if self._started:
+                return
             self._started = True
-            self._worker.start()
+        self._worker.start()
 
     def prime(self, reps: int = 2) -> None:
         """Measured warmup: compile every bucket x precision and feed
@@ -284,6 +288,7 @@ class AsyncServeFrontend:
         doomed: List[_FrontendRequest] = []
         with self._cond:
             self._stop = True
+            started = self._started
             if not drain:
                 doomed, self._queue = self._queue, []
             self._cond.notify_all()
@@ -291,7 +296,7 @@ class AsyncServeFrontend:
             self._resolve_error(req, AdmissionRejected(
                 f"request {req.rid} dropped by frontend shutdown",
                 stage="shutdown"), counter=None)
-        if self._started:
+        if started:
             self._worker.join(timeout=timeout_s)
         for eng in self._engines.values():
             eng.close()

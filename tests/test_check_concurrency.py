@@ -1,0 +1,284 @@
+"""Concurrency lint: the shipped serve stack is clean (regression for
+the lock-discipline bugs this checker found and fixed), and synthetic
+fixtures fire each lint rule by id."""
+import textwrap
+
+import pytest
+
+from repro.analysis.check import (Allowlist, DEFAULT_ALLOWLIST, lint_file,
+                                  lint_files)
+
+
+def _lint_src(tmp_path, src, allowlist=None, name="mod.py"):
+    path = tmp_path / name
+    path.write_text(textwrap.dedent(src))
+    return lint_file(str(path), allowlist=allowlist)
+
+
+def _fired(report):
+    return sorted({v.rule_id for v in report.failures(strict=True)})
+
+
+# ---------------------------------------------------------------------------
+# the real serve stack (regression: engine fault_stats writes now under
+# _qlock, frontend start()/close() check-and-set under _cond)
+# ---------------------------------------------------------------------------
+def test_serve_stack_is_lint_clean():
+    report = lint_files()
+    assert report.ok(strict=True), report.render(strict=True)
+    assert set(report.rules_run) >= {
+        "lint.unguarded_write", "lint.unguarded_read", "lint.lock_order",
+        "lint.callback_in_lock", "lint.check_then_act"}
+
+
+def test_serve_stack_clean_even_without_read_allowlist():
+    # the default allowlist only waives *reads* of snapshot dicts; the
+    # write discipline must hold with no allowlist at all
+    report = lint_files(allowlist=Allowlist([]))
+    writes = [v for v in report.violations
+              if v.rule_id == "lint.unguarded_write"]
+    assert not writes, "\n".join(v.render() for v in writes)
+
+
+# ---------------------------------------------------------------------------
+# synthetic fixtures: one rule each
+# ---------------------------------------------------------------------------
+def test_unguarded_write_fires(tmp_path):
+    report = _lint_src(tmp_path, """
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+
+            def good(self):
+                with self._lock:
+                    self.count += 1
+
+            def bad(self):
+                self.count += 1
+        """)
+    assert _fired(report) == ["lint.unguarded_write"]
+    v, = report.errors()
+    assert "count" in v.message and "Counter.bad" in v.location
+
+
+def test_unguarded_read_warns(tmp_path):
+    report = _lint_src(tmp_path, """
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+
+            def bump(self):
+                with self._lock:
+                    self.count += 1
+
+            def peek(self):
+                return self.count
+        """)
+    assert report.ok(strict=False)          # WARNING: gates only strictly
+    assert _fired(report) == ["lint.unguarded_read"]
+
+
+def test_lock_order_inversion_fires(tmp_path):
+    report = _lint_src(tmp_path, """
+        import threading
+
+        class TwoLocks:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def one(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def two(self):
+                with self._b:
+                    with self._a:
+                        pass
+        """)
+    assert _fired(report) == ["lint.lock_order"]
+    v, = report.errors()
+    assert "_a" in v.message and "_b" in v.message
+
+
+def test_callback_under_lock_warns(tmp_path):
+    report = _lint_src(tmp_path, """
+        import threading
+
+        class Watcher:
+            def __init__(self, cb):
+                self._lock = threading.Lock()
+                self.on_failure = cb
+
+            def fire(self):
+                with self._lock:
+                    self.on_failure()
+        """)
+    assert _fired(report) == ["lint.callback_in_lock"]
+
+
+def test_check_then_act_fires(tmp_path):
+    report = _lint_src(tmp_path, """
+        import threading
+
+        class Startable:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._started = False
+
+            def start(self):
+                if not self._started:
+                    self._started = True
+        """)
+    assert _fired(report) == ["lint.check_then_act"]
+
+
+def test_locked_helper_inherits_call_site_locks(tmp_path):
+    # the repo convention: _foo_locked helpers run under their callers'
+    # lock and must not be flagged
+    report = _lint_src(tmp_path, """
+        import threading
+
+        class Queue:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+
+            def put(self, x):
+                with self._lock:
+                    self.items = self.items + [x]
+
+            def drain(self):
+                with self._lock:
+                    return self._drain_locked()
+
+            def _drain_locked(self):
+                out, self.items = self.items, []
+                return out
+        """)
+    assert report.ok(strict=True), report.render(strict=True)
+
+
+def test_locked_helper_with_unlocked_call_site_is_flagged(tmp_path):
+    report = _lint_src(tmp_path, """
+        import threading
+
+        class Queue:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+
+            def put(self, x):
+                with self._lock:
+                    self.items = self.items + [x]
+
+            def drain(self):
+                return self._drain_locked()   # caller forgot the lock
+
+            def _drain_locked(self):
+                out, self.items = self.items, []
+                return out
+        """)
+    assert "lint.unguarded_write" in _fired(report)
+
+
+def test_explicit_acquire_release_tracked(tmp_path):
+    # the engine's collect() pattern: acquire(timeout=...) + try/finally
+    report = _lint_src(tmp_path, """
+        import threading
+
+        class Collector:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.results = {}
+
+            def put(self, k, v):
+                with self._lock:
+                    self.results[k] = v
+
+            def take(self, k):
+                if not self._lock.acquire(timeout=1.0):
+                    raise TimeoutError
+                try:
+                    return self.results.pop(k, None)
+                finally:
+                    self._lock.release()
+        """)
+    assert report.ok(strict=True), report.render(strict=True)
+
+
+def test_lockless_class_is_not_linted(tmp_path):
+    report = _lint_src(tmp_path, """
+        class Plain:
+            def __init__(self):
+                self.x = 0
+
+            def bump(self):
+                self.x += 1
+        """)
+    assert report.ok(strict=True) and not report.violations
+
+
+# ---------------------------------------------------------------------------
+# allowlist
+# ---------------------------------------------------------------------------
+def test_allowlist_suppresses(tmp_path):
+    src = """
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+
+            def bump(self):
+                with self._lock:
+                    self.count += 1
+
+            def bad(self):
+                self.count += 1
+
+            def peek(self):
+                return self.count
+        """
+    assert _fired(_lint_src(tmp_path, src)) == [
+        "lint.unguarded_read", "lint.unguarded_write"]
+    # Counter.count:read waives only the read
+    only_read = _lint_src(tmp_path, src,
+                          allowlist=Allowlist(["Counter.count:read"]))
+    assert _fired(only_read) == ["lint.unguarded_write"]
+    # Counter.count waives both
+    both = _lint_src(tmp_path, src, allowlist=Allowlist(["Counter.count"]))
+    assert both.ok(strict=True)
+
+
+def test_allowlist_parsing():
+    a = Allowlist(["# comment", "", "C.x", "D.y:read  # inline"])
+    assert a.allows("C", "x", "write") and a.allows("C", "x", "read")
+    assert a.allows("D", "y", "read") and not a.allows("D", "y", "write")
+    with pytest.raises(ValueError):
+        Allowlist(["noclassattr"])
+    with pytest.raises(ValueError):
+        Allowlist(["C.x:sometimes"])
+
+
+def test_allowlist_load(tmp_path):
+    p = tmp_path / "allow.txt"
+    p.write_text("# stats snapshots\nC.x:read\n")
+    a = Allowlist.load(str(p))
+    assert a.allows("C", "x", "read") and not a.allows("C", "x", "write")
+
+
+def test_default_allowlist_documents_engine_stats():
+    assert DEFAULT_ALLOWLIST.allows("DcnnServeEngine", "stats", "write")
+    assert DEFAULT_ALLOWLIST.allows("DcnnServeEngine", "fault_stats",
+                                    "read")
+    assert not DEFAULT_ALLOWLIST.allows("DcnnServeEngine", "fault_stats",
+                                        "write")

@@ -1,0 +1,266 @@
+"""Plan DRC: clean plans verify, every mutation fixture fires its one
+typed rule, and the serve engine rejects a corrupted pinned plan with a
+typed error before anything compiles."""
+import dataclasses
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.check import (PlanCheckError, check_network_plan,
+                                  check_plan_json, registered_rules)
+from repro.models.dcnn import DcnnConfig, DeconvLayerCfg, generator_init
+from repro.plan import NetworkPlan, build_network_plan
+from repro.serve import DcnnServeEngine, EngineConfig
+
+MNIST_SMALL = DcnnConfig(
+    name="dcnn-mnist-small",
+    z_dim=24, img_hw=28, img_c=1,
+    layers=(
+        DeconvLayerCfg(24, 32, 7, 1, 0, "relu"),
+        DeconvLayerCfg(32, 16, 4, 2, 1, "relu"),
+        DeconvLayerCfg(16, 1, 4, 2, 1, "tanh"),
+    ),
+)
+
+
+@pytest.fixture(autouse=True)
+def tmp_cache(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    monkeypatch.setattr(autotune, "_cache", None)
+
+
+@pytest.fixture(scope="module")
+def params():
+    p, _ = generator_init(jax.random.PRNGKey(0), MNIST_SMALL)
+    return p
+
+
+@pytest.fixture(scope="module")
+def pruned_params(params):
+    out = {}
+    for k, v in params.items():
+        w = np.asarray(v["w"]).copy()
+        thr = np.quantile(np.abs(w), 0.7)
+        w[np.abs(w) < thr] = 0.0
+        out[k] = {"w": w, "b": np.asarray(v["b"])}
+    return out
+
+
+def _fired(report):
+    return sorted({v.rule_id for v in report.failures(strict=True)})
+
+
+def _mutate_json(plan, edit, tmp_path, name="mutated.json"):
+    """Corrupt a pinned plan document the way drift does: edit the JSON
+    and drop the content hash (a tampered hash is caught at load, which
+    is a different failure mode from a plan that *re-pinned* stale)."""
+    doc = json.loads(plan.to_json())
+    edit(doc)
+    doc.pop("stable_hash", None)
+    path = tmp_path / name
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+# ---------------------------------------------------------------------------
+# clean plans verify
+# ---------------------------------------------------------------------------
+def test_clean_fp32_plan_is_drc_clean():
+    plan = build_network_plan(MNIST_SMALL, batch=4, backend="pallas")
+    report = check_network_plan(plan)
+    assert report.ok(strict=True), report.render(strict=True)
+    # every DRC rule actually ran, not just passed vacuously
+    assert {"drc.vmem_budget", "drc.tile_alignment", "drc.scale_chain",
+            "drc.roofline"} <= set(report.rules_run)
+
+
+def test_clean_int8_plan_is_drc_clean(params):
+    plan = build_network_plan(MNIST_SMALL, batch=4, precision="int8",
+                              params=params, calib_batch=8)
+    report = check_network_plan(plan)
+    assert report.ok(strict=True), report.render(strict=True)
+
+
+def test_clean_sparse_plan_is_drc_clean(pruned_params):
+    plan = build_network_plan(MNIST_SMALL, batch=2,
+                              backend="pallas_sparse", params=pruned_params)
+    report = check_network_plan(plan, params=pruned_params)
+    assert report.ok(strict=True), report.render(strict=True)
+
+
+def test_clean_plan_json_roundtrip_is_drc_clean(tmp_path):
+    plan = build_network_plan(MNIST_SMALL, batch=4, backend="pallas")
+    path = tmp_path / "plan.json"
+    plan.to_json(str(path))
+    report = check_plan_json(str(path))
+    assert report.ok(strict=True), report.render(strict=True)
+
+
+# ---------------------------------------------------------------------------
+# mutation fixtures: each corruption fires its specific typed rule
+# ---------------------------------------------------------------------------
+def test_oversized_tile_fires_vmem_budget(tmp_path):
+    plan = build_network_plan(MNIST_SMALL, batch=4, backend="pallas")
+
+    def edit(doc):
+        # stride-aligned but grotesquely over VMEM: only the budget rule
+        # has grounds to complain
+        t = doc["layers"][1]["tiles"]
+        t["t_oh"] = t["t_ow"] = 512
+        t["t_ci"] = t["t_co"] = 2048
+
+    report = check_plan_json(_mutate_json(plan, edit, tmp_path))
+    assert "drc.vmem_budget" in _fired(report), report.render()
+    v = report.by_rule()["drc.vmem_budget"][0]
+    assert v.layer == 1 and v.fix_hint
+
+
+def test_stride_misaligned_tile_fires_tile_alignment(tmp_path):
+    plan = build_network_plan(MNIST_SMALL, batch=4, backend="pallas")
+
+    def edit(doc):
+        doc["layers"][1]["tiles"]["t_oh"] = 7   # layer 1 has stride 2
+
+    report = check_plan_json(_mutate_json(plan, edit, tmp_path))
+    assert "drc.tile_alignment" in _fired(report), report.render()
+    assert report.by_rule()["drc.tile_alignment"][0].layer == 1
+
+
+def test_broken_scale_chain_fires_scale_chain(params, tmp_path):
+    plan = build_network_plan(MNIST_SMALL, batch=4, precision="int8",
+                              params=params, calib_batch=8)
+
+    def edit(doc):
+        doc["layers"][0]["out_scale"] = 123.0   # != layer 1's x_scale
+
+    report = check_plan_json(_mutate_json(plan, edit, tmp_path))
+    assert "drc.scale_chain" in _fired(report), report.render()
+    assert report.by_rule()["drc.scale_chain"][0].layer == 0
+
+
+def test_stale_sparse_digest_fires_sparse_digest(pruned_params, tmp_path):
+    plan = build_network_plan(MNIST_SMALL, batch=2,
+                              backend="pallas_sparse", params=pruned_params)
+
+    def edit(doc):
+        # the drift scenario: a pinned digest that no longer matches the
+        # served weights.  Tables are dropped (re-derived at serve time);
+        # the digest is the only record of what was validated.
+        for layer in doc["layers"]:
+            layer["sparse_digest"] = "0badc0de0badc0de"
+            layer.pop("sparse_tables", None)
+
+    path = _mutate_json(plan, edit, tmp_path)
+    loaded = NetworkPlan.load(path)
+    report = check_network_plan(loaded, params=pruned_params)
+    assert "drc.sparse_digest" in _fired(report), report.render()
+
+
+def test_misaligned_bucket_fires_bucket_mesh():
+    plan = build_network_plan(MNIST_SMALL, batch=4, backend="pallas")
+    # per-device batch 4 on 2 devices needs global bucket 8 — absent
+    report = check_network_plan(plan, n_devices=2, buckets=(4, 16))
+    assert "drc.bucket_mesh" in _fired(report), report.render()
+    # and the aligned mesh is clean
+    assert check_network_plan(plan, n_devices=2,
+                              buckets=(8, 16)).ok(strict=True)
+
+
+def test_unknown_activation_fires_epilogue():
+    plan = build_network_plan(MNIST_SMALL, batch=4, backend="pallas")
+    bad = dataclasses.replace(
+        plan, layers=(dataclasses.replace(plan.layers[0],
+                                          activation="swish"),)
+        + plan.layers[1:])
+    report = check_network_plan(bad)
+    assert "drc.epilogue" in _fired(report), report.render()
+
+
+def test_unloadable_plan_fires_schema(tmp_path):
+    path = tmp_path / "garbage.json"
+    path.write_text("{not json")
+    report = check_plan_json(str(path))
+    assert _fired(report) == ["drc.schema"]
+    # tampered content hash is also a load-time (schema) failure
+    plan = build_network_plan(MNIST_SMALL, batch=4, backend="pallas")
+    doc = json.loads(plan.to_json())
+    doc["layers"][1]["tiles"]["t_oh"] = 512
+    tampered = tmp_path / "tampered.json"
+    tampered.write_text(json.dumps(doc))
+    report = check_plan_json(str(tampered))
+    assert _fired(report) == ["drc.schema"]
+
+
+# ---------------------------------------------------------------------------
+# engine integration: typed rejection before any compile
+# ---------------------------------------------------------------------------
+def test_from_config_rejects_corrupt_plan_before_compile(monkeypatch):
+    plan = build_network_plan(MNIST_SMALL, batch=4, backend="pallas")
+    bad_tiles = dataclasses.replace(plan.layers[1].tiles,
+                                    t_oh=512, t_ow=512,
+                                    t_ci=2048, t_co=2048)
+    bad = dataclasses.replace(
+        plan, layers=plan.layers[:1]
+        + (dataclasses.replace(plan.layers[1], tiles=bad_tiles),)
+        + plan.layers[2:])
+
+    def boom(*a, **k):
+        raise AssertionError("engine compiled/planned before DRC verdict")
+
+    monkeypatch.setattr(DcnnServeEngine, "_warmup_bucket", boom)
+    monkeypatch.setattr(DcnnServeEngine, "_plan_for", boom)
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_SMALL)
+    cfg = EngineConfig(model=MNIST_SMALL, backend="pallas",
+                       max_batch=4, warmup=True)
+    with pytest.raises(PlanCheckError) as ei:
+        DcnnServeEngine.from_config(cfg, params, plan=bad)
+    err = ei.value
+    assert isinstance(err, ValueError)          # typed, catchable as both
+    assert any(v.rule_id == "drc.vmem_budget" for v in err.violations)
+    assert "drc.vmem_budget" in err.report()
+
+
+def test_from_config_accepts_clean_pinned_plan():
+    plan = build_network_plan(MNIST_SMALL, batch=4, backend="pallas")
+    params, _ = generator_init(jax.random.PRNGKey(0), MNIST_SMALL)
+    cfg = EngineConfig(model=MNIST_SMALL, backend="pallas",
+                       max_batch=4, warmup=False)
+    eng = DcnnServeEngine.from_config(cfg, params, plan=plan)
+    assert eng.plans[eng.max_bucket] is plan
+
+
+# ---------------------------------------------------------------------------
+# registry + CLI plumbing
+# ---------------------------------------------------------------------------
+def test_rule_registry_covers_both_passes():
+    rules = registered_rules()
+    assert {"drc.vmem_budget", "drc.tile_alignment", "drc.scale_chain",
+            "drc.sparse_digest", "drc.bucket_mesh", "drc.epilogue",
+            "drc.roofline", "drc.geometry_chain", "drc.backend",
+            "drc.schema", "lint.unguarded_write", "lint.unguarded_read",
+            "lint.lock_order", "lint.callback_in_lock",
+            "lint.check_then_act", "bench.sections", "bench.keys",
+            "bench.nan"} <= set(rules)
+
+
+def test_cli_gates_on_mutated_plan(tmp_path, capsys):
+    from repro.analysis.check.__main__ import main
+
+    plan = build_network_plan(MNIST_SMALL, batch=4, backend="pallas")
+
+    def edit(doc):
+        doc["layers"][1]["tiles"]["t_oh"] = 7
+
+    bad = _mutate_json(plan, edit, tmp_path)
+    good = tmp_path / "good.json"
+    plan.to_json(str(good))
+    # --lint with no files skips the lint pass: plan DRC only
+    assert main(["--plan-json", str(good), "--lint"]) == 0
+    assert main(["--plan-json", bad, "--lint"]) == 1
+    out = capsys.readouterr().out
+    assert "drc.tile_alignment" in out
