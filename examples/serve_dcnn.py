@@ -20,6 +20,12 @@ instead of the raw engine: requests carry a per-tenant deadline
 (``--slo-ms``), admission control sheds typed what cannot make it, and
 the scheduler downgrades fp32 requests onto the pinned int8 chain when
 that is the only way to hold the SLO.
+
+``--trace out.json`` turns on the `repro.obs` span tracer for the run
+and writes a Chrome/Perfetto ``trace_event`` JSON on exit — open it at
+https://ui.perfetto.dev to see admission, EDF queue wait, wave dispatch,
+per-bucket kernel calls and collect as one timeline, with retries and
+remesh events as instant markers.
 """
 import argparse
 import os
@@ -86,13 +92,31 @@ def main():
                     help="serve through the SLO-aware async frontend")
     ap.add_argument("--slo-ms", type=float, default=200.0,
                     help="gold-tenant latency SLO for --async (ms)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Perfetto trace of the run to this path")
     args = ap.parse_args()
+
+    if args.trace:
+        from repro.obs import trace as obstrace
+
+        obstrace.enable(clear=True)
 
     cfg = MNIST_DCNN if args.net == "mnist" else CELEBA_DCNN
     params, _ = generator_init(jax.random.PRNGKey(0), cfg)
-    if args.use_async:
-        run_async(cfg, params, args)
-        return
+    try:
+        if args.use_async:
+            run_async(cfg, params, args)
+            return
+        run_sync(cfg, params, args)
+    finally:
+        if args.trace:
+            obstrace.disable()
+            n = obstrace.get_tracer().export(args.trace)
+            print(f"trace: {n} events -> {args.trace} "
+                  f"(open at https://ui.perfetto.dev)")
+
+
+def run_sync(cfg, params, args):
     # a pre-existing --plan-json is a pinned deployment artifact: DRC it
     # statically and serve it; a fresh path is written at the end instead
     pinned = None

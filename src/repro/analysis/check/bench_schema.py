@@ -14,13 +14,27 @@ from typing import Any, List
 
 from .rules import CheckReport, Severity, rule
 
-#: {section: container type}.  ``table2`` may legitimately be an empty
-#: list (smoke mode skips the paper-table timing sweep).
+#: {section: container type}.  Since the obs layer landed, ``table2`` is
+#: populated in every mode (smoke emits interpret-mode rows via
+#: `repro.obs.report`); `bench.table2_rows` rejects an empty section.
 SECTIONS = {
     "table2": list, "traffic": list, "autotune": list, "scaling": list,
     "batch_sweep": list, "serving": dict, "sharded": dict, "quant": list,
     "plan": list, "degraded": dict, "slo": dict,
 }
+
+#: obs-produced Table II rows (`repro.obs.report.table2_rows`) carry the
+#: run-to-run statistics; legacy full-sweep rows carry the GOPS columns.
+#: Either shape is a valid table2 row — `bench.table2_rows` requires one
+#: of the two key sets to be complete.
+TABLE2_STAT_KEYS = ("net", "precision", "bucket", "calls", "mean_s",
+                    "std_s", "cv", "tainted_calls")
+TABLE2_LEGACY_KEYS = ("net", "layer", "rl_gops", "rl_cv", "zi_gops",
+                      "zi_cv")
+#: generous healthy-run CV ceiling: interpret-mode CPU timing jitters,
+#: but a healthy dispatch population whose std exceeds 1.5x its mean
+#: means the "healthy" tagging broke (compiles or retries leaked in)
+TABLE2_CV_MAX = 1.5
 
 #: per-row required keys for the sections the smoke run always fills
 ROW_KEYS = {
@@ -108,7 +122,64 @@ def check_finite(r, doc):
     return out
 
 
-BENCH_RULES = ("bench.sections", "bench.keys", "bench.nan")
+@rule("bench.table2_rows",
+      "the table2 section is empty or a row matches neither schema")
+def check_table2_rows(r, doc):
+    out = []
+    if not isinstance(doc, dict) or not isinstance(doc.get("table2"), list):
+        return out          # shape problems are bench.sections' findings
+    rows = doc["table2"]
+    if not rows:
+        return [r.violation(
+            "table2 is empty: the bench no longer reports the paper's "
+            "run-to-run variation statistics",
+            location="table2",
+            fix_hint="smoke mode must emit obs rows (bench_deconv."
+                     "table2_obs_rows via repro.obs.report)")]
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            out.append(r.violation(f"row {i} is not an object",
+                                   location=f"table2[{i}]"))
+            continue
+        if (any(k not in row for k in TABLE2_STAT_KEYS)
+                and any(k not in row for k in TABLE2_LEGACY_KEYS)):
+            out.append(r.violation(
+                f"row {i} is neither an obs statistics row "
+                f"({', '.join(TABLE2_STAT_KEYS)}) nor a legacy sweep row "
+                f"({', '.join(TABLE2_LEGACY_KEYS)})",
+                location=f"table2[{i}]",
+                fix_hint="a key rename in obs/report.py or "
+                         "bench_deconv.py must update TABLE2_*_KEYS"))
+    return out
+
+
+@rule("bench.table2_cv",
+      "a healthy-run CV in table2 exceeds the pinned ceiling")
+def check_table2_cv(r, doc):
+    out = []
+    if not isinstance(doc, dict) or not isinstance(doc.get("table2"), list):
+        return out
+    for i, row in enumerate(doc["table2"]):
+        if not isinstance(row, dict) or "cv" not in row:
+            continue        # legacy sweep rows carry rl_cv/zi_cv instead
+        cv = row["cv"]
+        if isinstance(cv, float) and not math.isfinite(cv):
+            continue        # bench.nan's finding
+        if cv > TABLE2_CV_MAX:
+            out.append(r.violation(
+                f"row {i} ({row.get('net')}/{row.get('precision')}/"
+                f"b{row.get('bucket')}): healthy-run cv={cv:.3f} exceeds "
+                f"{TABLE2_CV_MAX} — run-to-run variation regressed, or "
+                "unhealthy samples (compiles, retries) leaked into the "
+                "healthy population",
+                location=f"table2[{i}]",
+                fix_hint="check the engine's steady/tainted outcome "
+                         "tagging before raising TABLE2_CV_MAX"))
+    return out
+
+
+BENCH_RULES = ("bench.sections", "bench.keys", "bench.nan",
+               "bench.table2_rows", "bench.table2_cv")
 
 
 def check_bench_doc(doc, name: str = "BENCH_deconv.json") -> CheckReport:
@@ -117,6 +188,8 @@ def check_bench_doc(doc, name: str = "BENCH_deconv.json") -> CheckReport:
     report.extend(check_sections(doc))
     report.extend(check_row_keys(doc))
     report.extend(check_finite(doc))
+    report.extend(check_table2_rows(doc))
+    report.extend(check_table2_cv(doc))
     return report
 
 

@@ -642,18 +642,22 @@ def lint_file(path: str,
 def default_target_files() -> List[str]:
     """The threaded serve stack, located via the modules themselves (so
     the CLI works from any cwd)."""
-    from ... import dist, serve
+    from ... import dist, obs, serve
 
     sdir = os.path.dirname(os.path.abspath(serve.__file__))
     ddir = os.path.dirname(os.path.abspath(dist.__file__))
+    odir = os.path.dirname(os.path.abspath(obs.__file__))
     return [os.path.join(sdir, "engine.py"),
             os.path.join(sdir, "frontend.py"),
-            os.path.join(ddir, "fault.py")]
+            os.path.join(ddir, "fault.py"),
+            os.path.join(odir, "metrics.py"),
+            os.path.join(odir, "trace.py")]
 
 
 def lint_files(paths: Optional[Sequence[str]] = None,
                allowlist: Optional[Allowlist] = None) -> CheckReport:
-    """Lint ``paths`` (default: engine.py, frontend.py, fault.py)."""
+    """Lint ``paths`` (default: engine.py, frontend.py, fault.py, plus
+    the obs layer's metrics.py and trace.py)."""
     paths = default_target_files() if paths is None else list(paths)
     report = CheckReport("concurrency-lint")
     report.rules_run += list(LINT_RULES)

@@ -23,7 +23,6 @@ import json
 import os
 import pathlib
 import threading
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -380,16 +379,27 @@ def _time_candidate(
         fn = deconv2d
     from .deconv2d.ops import suppress_tile_warnings
 
+    from ..obs import clock as obsclock
+    from ..obs import metrics as obsmetrics
+
+    # refine timings are observability, not just a ranking input: the
+    # process registry keeps them as a histogram so a tuning run's
+    # run-to-run spread is inspectable next to the serve-path Table II
+    hist = obsmetrics.default_registry().histogram(
+        "autotune.refine_seconds",
+        "per-rep candidate wall clock during refine=True tuning")
     kwargs = choice.as_kwargs()
     with suppress_tile_warnings():  # internal harness, not a user call
         jax.block_until_ready(
             fn(x, w, None, geom.stride, geom.padding, **kwargs))  # compile
         ts = []
         for _ in range(reps):
-            t0 = time.perf_counter()
+            t0 = obsclock.now()
             jax.block_until_ready(
                 fn(x, w, None, geom.stride, geom.padding, **kwargs))
-            ts.append(time.perf_counter() - t0)
+            ts.append(obsclock.now() - t0)
+            hist.observe(ts[-1], backend=backend, batch=batch,
+                         dtype=np.dtype(dtype).name)
     return float(np.median(ts))
 
 

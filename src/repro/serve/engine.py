@@ -30,6 +30,9 @@ from ..dist.fault import Heartbeat, StragglerMonitor
 from ..dist.inject import DeviceLossError, TransientCallError
 from ..models.dcnn import DcnnConfig, generator_apply
 from ..models.transformer import ModelConfig, apply_lm, init_cache
+from ..obs import clock as obsclock
+from ..obs import metrics as obsmetrics
+from ..obs import trace as obstrace
 from .config import EngineConfig
 from .errors import AdmissionRejected, DeadlineExceeded, EngineDegraded
 from .sampling import sample
@@ -298,7 +301,7 @@ class DcnnServeEngine:
 
     @classmethod
     def from_config(cls, cfg: EngineConfig, params, plan=None,
-                    fault_injector=None) -> "DcnnServeEngine":
+                    fault_injector=None, metrics=None) -> "DcnnServeEngine":
         """The plan/execute constructor: ``cfg`` is a `serve.EngineConfig`
         and ``plan`` an optional pinned `plan.NetworkPlan` (e.g. loaded
         from JSON) for the bucket whose per-device batch matches
@@ -307,13 +310,16 @@ class DcnnServeEngine:
         is None, so a pinned deployment never re-calibrates.
         ``fault_injector`` is an optional `dist.inject.FaultInjector`
         hooked before every bucket dispatch (deterministic fault drills;
-        never needed in production)."""
+        never needed in production).  ``metrics`` is an optional shared
+        `obs.MetricsRegistry` — the async frontend passes one registry to
+        every per-precision engine so the deployment's series land in one
+        place; without it the engine makes its own."""
         self = cls.__new__(cls)
-        self._setup(cfg, params, plan, fault_injector)
+        self._setup(cfg, params, plan, fault_injector, metrics)
         return self
 
     def _setup(self, config: EngineConfig, params, plan,
-               fault_injector=None) -> None:
+               fault_injector=None, metrics=None) -> None:
         cfg = config.model
         self.config = config
         self.cfg = cfg
@@ -396,6 +402,35 @@ class DcnnServeEngine:
         # donation is a TPU win (steady-state z buffers are reused); on CPU
         # jax warns that donation is unimplemented, so gate on the backend
         self._donate = config.donate and jax.default_backend() == "tpu"
+        # typed observability: every legacy dict below (stats, bucket_stats,
+        # plan_stats, fault_stats) keeps its exact shape for existing
+        # callers AND dual-writes the shared registry at the same sites,
+        # labeled (net, precision[, bucket]) so one registry can hold a
+        # whole multi-engine deployment.  Spans go to the process tracer
+        # (no-ops unless obs.trace.enable() ran).
+        self.metrics = (metrics if metrics is not None
+                        else obsmetrics.MetricsRegistry())
+        self._tracer = obstrace.get_tracer()
+        self._mlabels = {"net": cfg.name, "precision": self.precision}
+        self._m_dispatch = self.metrics.histogram(
+            "engine.dispatch_seconds",
+            "healthy steady-state dispatch wall clock (Table II samples)")
+        self._m_plan_build = self.metrics.histogram(
+            "engine.plan_build_seconds", "NetworkPlan build wall clock")
+        self._m_tainted = self.metrics.counter(
+            "engine.tainted_calls",
+            "steady dispatches excluded from Table II (transient retries)")
+        self._m_fault = self.metrics.counter(
+            "engine.fault_events", "fault-path events by kind (label: event)")
+        self._m_generate_calls = self.metrics.counter(
+            "engine.generate_calls", "generate() invocations")
+        self._m_images = self.metrics.counter(
+            "engine.images", "useful (unpadded) images generated")
+        self._m_padded = self.metrics.counter(
+            "engine.padded_images", "padded rows burned on bucket alignment")
+        self._m_devices = self.metrics.gauge(
+            "engine.device_count", "devices serving this engine")
+        self._m_devices.set(self.n_devices, **self._mlabels)
         self._fns: Dict[int, Callable] = {}
         self.plans: Dict[int, object] = {}
         self.tile_choices: Dict[int, Optional[dict]] = {}
@@ -480,7 +515,7 @@ class DcnnServeEngine:
         if bucket not in self.plans:
             from ..plan import build_network_plan
 
-            t0 = time.perf_counter()
+            t0 = obsclock.now()
             self.plans[bucket] = build_network_plan(
                 self.cfg,
                 batch=self.shard_batch(bucket),
@@ -492,8 +527,13 @@ class DcnnServeEngine:
                 refine=self._refine,
                 sparse_table_cache=self._sparse_plan_memo,
             )
+            dt = obsclock.now() - t0
             self.plan_stats["builds"] += 1
-            self.plan_stats["build_seconds"] += time.perf_counter() - t0
+            self.plan_stats["build_seconds"] += dt
+            self._m_plan_build.observe(dt, bucket=bucket, **self._mlabels)
+            self._tracer.complete(f"plan_build b{bucket}", t0, t0 + dt,
+                                  cat="engine", bucket=bucket,
+                                  **self._mlabels)
         return self.plans[bucket]
 
     def _get_fn(self, bucket: int) -> Callable:
@@ -560,6 +600,8 @@ class DcnnServeEngine:
         # counter bump takes _qlock like every other fault_stats write.
         with self._qlock:
             self.fault_stats["heartbeat_fires"] += 1
+        self._m_fault.inc(event="heartbeat_fires", **self._mlabels)
+        self._tracer.instant("heartbeat_fire", cat="fault", **self._mlabels)
 
     def close(self) -> None:
         """Release the stall-watcher thread (no-op without a heartbeat)."""
@@ -590,20 +632,27 @@ class DcnnServeEngine:
                 # the injector hook sits inside the timed window: an
                 # injected SlowCall is a slow *dispatch*, visible to the
                 # straggler monitor exactly like a real one
-                t0 = time.perf_counter()
+                t0 = obsclock.now()
                 if self.fault_injector is not None:
                     self.fault_injector.before_call(bucket)
                 y = np.asarray(fn(self.params, jnp.asarray(chunk)))
-                dt = time.perf_counter() - t0
+                dt = obsclock.now() - t0
             except TransientCallError as e:
                 with self._qlock:
                     self.fault_stats["transient_failures"] += 1
+                self._m_fault.inc(event="transient_failures", **self._mlabels)
+                self._tracer.instant("transient_failure", cat="fault",
+                                     bucket=bucket, attempt=attempt,
+                                     **self._mlabels)
                 if attempt + 1 >= attempts:
                     raise EngineDegraded(
                         f"bucket-{bucket} call failed {attempts} "
                         "time(s); retries exhausted") from e
                 with self._qlock:
                     self.fault_stats["retries"] += 1
+                self._m_fault.inc(event="retries", **self._mlabels)
+                self._tracer.instant("retry", cat="fault", bucket=bucket,
+                                     attempt=attempt, **self._mlabels)
                 time.sleep(self.config.retry_backoff_s * (2 ** attempt))
                 continue
             finally:
@@ -622,6 +671,13 @@ class DcnnServeEngine:
                 if mon.observe(self._dispatches, dt):
                     with self._qlock:
                         self.fault_stats["stragglers"] += 1
+                    self._m_fault.inc(event="stragglers", **self._mlabels)
+                    self._tracer.instant("straggler", cat="fault",
+                                         bucket=bucket, seconds=dt,
+                                         **self._mlabels)
+            self._tracer.complete(f"dispatch b{bucket}", t0, t0 + dt,
+                                  cat="engine", bucket=bucket, steady=steady,
+                                  retried=retried, **self._mlabels)
             return y, dt, steady, retried
 
     def _remesh(self, keep: int) -> None:
@@ -642,7 +698,7 @@ class DcnnServeEngine:
                                      tree_shardings)
         from ..plan import executable_fingerprints
 
-        t0 = time.perf_counter()
+        t0 = obsclock.now()
         devs = list(self.mesh.devices.flat)
         if not 1 <= keep <= len(devs):
             raise EngineDegraded(
@@ -687,10 +743,16 @@ class DcnnServeEngine:
             "plan_hashes_before": before,
             "plan_hashes_after": after,
             "plan_hash_matches": matches,
-            "seconds": time.perf_counter() - t0,
+            "seconds": obsclock.now() - t0,
         }
         with self._qlock:
             self.fault_stats["remesh_events"].append(event)
+        self._m_fault.inc(event="remesh_events", **self._mlabels)
+        self._m_devices.set(self.n_devices, **self._mlabels)
+        self._tracer.instant("remesh", cat="fault",
+                             devices_before=devices_before,
+                             devices_after=self.n_devices,
+                             seconds=event["seconds"], **self._mlabels)
         if not all(matches.values()):
             raise EngineDegraded(
                 f"post-remesh plan hash mismatch {matches}: the "
@@ -760,6 +822,7 @@ class DcnnServeEngine:
         raising."""
         z = np.asarray(z, dtype=self.cfg.dtype)
         n = z.shape[0]
+        t_gen = obsclock.now()
         outs: List[np.ndarray] = []
         i = 0
         chunks = self.plan_chunks(n)
@@ -780,6 +843,7 @@ class DcnnServeEngine:
             chunks.pop(0)
             if pad:
                 self.stats["padded_images"] += pad
+                self._m_padded.inc(pad, **self._mlabels)
             if steady:
                 # steady-state call: a call that traced (compiled) would
                 # poison the learned rates by orders of magnitude
@@ -795,6 +859,7 @@ class DcnnServeEngine:
                     # healthy path*, the paper's predictability claim)
                     bs["tainted_calls"] += 1
                     bs["tainted_seconds"] += dt
+                    self._m_tainted.inc(bucket=bucket, **self._mlabels)
                 else:
                     bs["calls"] += 1
                     bs["images"] += take
@@ -804,10 +869,16 @@ class DcnnServeEngine:
                     # long-lived engine would grow without bound
                     bs["seconds"] += dt
                     bs["sumsq_seconds"] += dt * dt
+                    self._m_dispatch.observe(dt, bucket=bucket,
+                                             **self._mlabels)
             outs.append(y[:take])
             i += take
         self.stats["generate_calls"] += 1
         self.stats["images"] += n
+        self._m_generate_calls.inc(**self._mlabels)
+        self._m_images.inc(n, **self._mlabels)
+        self._tracer.complete("generate", t_gen, obsclock.now(),
+                              cat="engine", rows=n, **self._mlabels)
         return (np.concatenate(outs, axis=0) if len(outs) != 1
                 else outs[0])
 
@@ -877,7 +948,7 @@ class DcnnServeEngine:
         if deadline_s is None:
             deadline_s = self.config.default_deadline_s
         deadline = (None if deadline_s is None
-                    else time.monotonic() + deadline_s)
+                    else obsclock.now() + deadline_s)
         with self._qlock:
             rid = self._next_id
             self._next_id += 1
@@ -899,6 +970,9 @@ class DcnnServeEngine:
                     self._failures[rid] = AdmissionRejected(
                         reason or f"ticket {rid} shed before execution",
                         stage="shed")
+                    self._m_fault.inc(event="shed", **self._mlabels)
+                    self._tracer.instant("shed", cat="fault", rid=rid,
+                                         **self._mlabels)
                     return True
         return False
 
@@ -928,13 +1002,17 @@ class DcnnServeEngine:
                 return
             reqs, self._pending = self._pending, []
             live = []
-            now = time.monotonic()
+            now = obsclock.now()
             for rid, z, deadline in reqs:
                 if deadline is not None and now > deadline:
                     self.fault_stats["deadline_expired"] += 1
                     self._failures[rid] = DeadlineExceeded(
                         f"ticket {rid} missed its deadline by "
                         f"{now - deadline:.3f}s before execution")
+                    self._m_fault.inc(event="deadline_expired",
+                                      **self._mlabels)
+                    self._tracer.instant("deadline_expired", cat="fault",
+                                         rid=rid, **self._mlabels)
                 else:
                     live.append((rid, z, deadline))
                     self._inflight.add(rid)
@@ -971,10 +1049,10 @@ class DcnnServeEngine:
         blocking forever (the pre-fix behavior for a vanished ticket was
         an unbounded wait under concurrent draining)."""
         deadline = (None if timeout_s is None
-                    else time.monotonic() + timeout_s)
+                    else obsclock.now() + timeout_s)
 
         def expired() -> bool:
-            return deadline is not None and time.monotonic() >= deadline
+            return deadline is not None and obsclock.now() >= deadline
 
         while True:
             with self._qlock:
@@ -994,7 +1072,7 @@ class DcnnServeEngine:
                 if deadline is None:
                     self.drain()
                     continue
-                remaining = deadline - time.monotonic()
+                remaining = deadline - obsclock.now()
                 if remaining <= 0 or not self._drain_lock.acquire(
                         timeout=remaining):
                     raise DeadlineExceeded(

@@ -43,6 +43,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import clock as obsclock
+from ..obs import metrics as obsmetrics
+from ..obs import trace as obstrace
 from .admission import AdmissionController, TenantClass
 from .errors import (AdmissionRejected, DeadlineExceeded, EngineDegraded,
                      EngineError)
@@ -54,7 +57,7 @@ class _FrontendRequest:
 
     __slots__ = ("rid", "tenant", "z", "rows", "submit_t", "deadline",
                  "precision_hint", "precision", "downgraded", "requeues",
-                 "event", "result", "error")
+                 "event", "result", "error", "qspan")
 
     def __init__(self, rid: int, tenant: TenantClass, z: np.ndarray,
                  submit_t: float, deadline: Optional[float]):
@@ -71,6 +74,9 @@ class _FrontendRequest:
         self.event = threading.Event()
         self.result: Optional[np.ndarray] = None
         self.error: Optional[Exception] = None
+        # open queue_wait trace handle (begun at submit, ended when the
+        # worker picks or sheds the request; None while not queued)
+        self.qspan = None
 
 
 def _tenant_zero() -> Dict[str, object]:
@@ -92,7 +98,8 @@ class AsyncServeFrontend:
                  tenants: Sequence[TenantClass], *,
                  max_queue_rows: int = 256, safety: float = 1.2,
                  max_requeues: int = 1,
-                 model: Optional[ServiceModel] = None, start: bool = True):
+                 model: Optional[ServiceModel] = None, start: bool = True,
+                 metrics: Optional[obsmetrics.MetricsRegistry] = None):
         if FP32 not in engines:
             raise ValueError(
                 "AsyncServeFrontend needs a 'fp32' engine (the undegraded "
@@ -117,6 +124,25 @@ class AsyncServeFrontend:
             if t.name in self._tenants:
                 raise ValueError(f"duplicate tenant class {t.name!r}")
             self._tenants[t.name] = t
+
+        # typed observability, dual-written beside the legacy per-tenant
+        # dicts at the same sites (tests assert exact equality).  Pass the
+        # engines' shared registry (see from_config) so the whole stack's
+        # series — engine dispatch histograms included — land in one place.
+        self.metrics = (metrics if metrics is not None
+                        else obsmetrics.MetricsRegistry())
+        self._tracer = obstrace.get_tracer()
+        self._m_req = self.metrics.counter(
+            "frontend.requests",
+            "request outcomes by tenant (labels: tenant, outcome)")
+        self._m_latency = self.metrics.histogram(
+            "frontend.request_latency_seconds",
+            "submit-to-completion latency (labels: tenant, precision)")
+        self._m_qwait = self.metrics.histogram(
+            "frontend.queue_wait_seconds",
+            "submit-to-wave-pick queue wait (label: tenant)")
+        self._m_qrows = self.metrics.gauge(
+            "frontend.queue_rows", "rows currently queued")
 
         self._model = model if model is not None else ServiceModel()
         for precision, eng in self._engines.items():
@@ -163,6 +189,11 @@ class AsyncServeFrontend:
         ``fault_injector`` is wired into the fp32 engine (drills)."""
         from .engine import DcnnServeEngine
 
+        # one registry for the whole deployment: every per-precision
+        # engine and the frontend record into the same series space
+        metrics = kwargs.pop("metrics", None)
+        if metrics is None:
+            metrics = obsmetrics.MetricsRegistry()
         engines = {}
         for precision in precisions:
             ecfg = (cfg if cfg.precision == precision
@@ -172,8 +203,9 @@ class AsyncServeFrontend:
                 plan=(plan if plan is not None
                       and plan.precision == precision else None),
                 fault_injector=(fault_injector if precision == FP32
-                                else None))
-        self = cls(engines, tenants, start=False, **kwargs)
+                                else None),
+                metrics=metrics)
+        self = cls(engines, tenants, start=False, metrics=metrics, **kwargs)
         if prime:
             self.prime(reps=prime)
         self.start()
@@ -197,9 +229,9 @@ class AsyncServeFrontend:
             for b in eng.buckets:
                 z = np.zeros((b, self._zdim), self._dtype)
                 for r in range(reps + 1):
-                    t0 = time.monotonic()
+                    t0 = obsclock.now()
                     eng.generate(z)
-                    dt = time.monotonic() - t0
+                    dt = obsclock.now() - t0
                     if r:  # first call pays compile: not a steady sample
                         self._model.observe(precision, b, dt)
 
@@ -221,7 +253,7 @@ class AsyncServeFrontend:
             z = z[None, :]
         if z.shape[0] == 0:
             raise ValueError("empty request: z has no rows")
-        now = time.monotonic()
+        now = obsclock.now()
         slo = slo_ms if slo_ms is not None else t.slo_ms
         deadline = None if slo is None else now + slo / 1e3
         req = _FrontendRequest(-1, t, z, now, deadline)
@@ -234,9 +266,13 @@ class AsyncServeFrontend:
             try:
                 req.precision_hint = self._admission.admit(
                     req, queued_rows, backlog_s, now)
-            except AdmissionRejected:
+            except AdmissionRejected as e:
                 with self._slock:
                     self._tenant_stats[t.name]["shed_admission"] += 1
+                self._m_req.inc(tenant=t.name, outcome="shed_admission")
+                self._tracer.instant("admission_rejected", cat="frontend",
+                                     tenant=t.name, stage=e.stage,
+                                     rows=req.rows)
                 raise
             req.rid = self._next_rid
             self._next_rid += 1
@@ -244,7 +280,15 @@ class AsyncServeFrontend:
             with self._slock:
                 self._requests[req.rid] = req
                 self._tenant_stats[t.name]["admitted"] += 1
+            self._m_req.inc(tenant=t.name, outcome="admitted")
+            self._m_qrows.set(queued_rows + req.rows)
+            req.qspan = self._tracer.begin("queue_wait", cat="frontend",
+                                           rid=req.rid, tenant=t.name,
+                                           rows=req.rows)
             self._cond.notify()
+        self._tracer.complete("submit", now, obsclock.now(), cat="frontend",
+                              rid=req.rid, tenant=t.name, rows=req.rows,
+                              precision_hint=req.precision_hint)
         return req.rid
 
     def result(self, rid: int,
@@ -253,6 +297,7 @@ class AsyncServeFrontend:
         Results are handed out exactly once.  ``timeout_s`` bounds the
         wait: expiry raises `DeadlineExceeded` without consuming the
         request (a later `result` call can still pick it up)."""
+        t0 = obsclock.now()
         with self._slock:
             req = self._requests.get(rid)
         if req is None:
@@ -263,6 +308,9 @@ class AsyncServeFrontend:
                 f"request {rid} unresolved after {timeout_s:.3f}s")
         with self._slock:
             self._requests.pop(rid, None)
+        self._tracer.complete("collect", t0, obsclock.now(), cat="frontend",
+                              rid=rid, tenant=req.tenant.name,
+                              failed=req.error is not None)
         if req.error is not None:
             raise req.error
         return req.result
@@ -270,12 +318,12 @@ class AsyncServeFrontend:
     def drain(self, timeout_s: Optional[float] = None) -> None:
         """Block until the queue and in-flight wave are empty."""
         deadline = (None if timeout_s is None
-                    else time.monotonic() + timeout_s)
+                    else obsclock.now() + timeout_s)
         while True:
             with self._cond:
                 if not self._queue and not self._inflight:
                     return
-            if deadline is not None and time.monotonic() >= deadline:
+            if deadline is not None and obsclock.now() >= deadline:
                 raise DeadlineExceeded(
                     f"frontend not drained within {timeout_s:.3f}s")
             time.sleep(0.002)
@@ -293,6 +341,8 @@ class AsyncServeFrontend:
                 doomed, self._queue = self._queue, []
             self._cond.notify_all()
         for req in doomed:
+            self._tracer.end(req.qspan, outcome="shutdown")
+            req.qspan = None
             self._resolve_error(req, AdmissionRejected(
                 f"request {req.rid} dropped by frontend shutdown",
                 stage="shutdown"), counter=None)
@@ -341,6 +391,11 @@ class AsyncServeFrontend:
         with self._slock:
             for name in self._tenant_stats:
                 self._tenant_stats[name] = _tenant_zero()
+        # keep the registry's frontend series in lockstep with the legacy
+        # dicts (engine series are cumulative state and stay)
+        self._m_req.reset()
+        self._m_latency.reset()
+        self._m_qwait.reset()
 
     def plan_fingerprints(self) -> Dict[str, str]:
         """{"b{batch}/{precision}": stable hash} over every pinned
@@ -371,6 +426,10 @@ class AsyncServeFrontend:
         if counter is not None:
             with self._slock:
                 self._tenant_stats[req.tenant.name][counter] += 1
+            self._m_req.inc(tenant=req.tenant.name, outcome=counter)
+        self._tracer.instant("request_failed", cat="frontend", rid=req.rid,
+                             tenant=req.tenant.name,
+                             error=type(error).__name__)
         req.event.set()
 
     def _record_completion(self, req: _FrontendRequest, precision: str,
@@ -383,6 +442,11 @@ class AsyncServeFrontend:
             if req.downgraded:
                 st["downgraded"] += 1
             st["latencies_s"].append(done_t - req.submit_t)
+        self._m_req.inc(tenant=req.tenant.name, outcome="completed")
+        if req.downgraded:
+            self._m_req.inc(tenant=req.tenant.name, outcome="downgraded")
+        self._m_latency.observe(done_t - req.submit_t,
+                                tenant=req.tenant.name, precision=precision)
         req.event.set()
 
     def _run(self) -> None:
@@ -394,6 +458,16 @@ class AsyncServeFrontend:
                     break
                 wave, precision, sheds = self._pick_wave_locked()
                 self._inflight = list(wave)
+                self._m_qrows.set(sum(r.rows for r in self._queue))
+            picked_t = obsclock.now()
+            for req in wave:
+                self._tracer.end(req.qspan, outcome="dispatched")
+                req.qspan = None
+                self._m_qwait.observe(picked_t - req.submit_t,
+                                      tenant=req.tenant.name)
+            for req in sheds:
+                self._tracer.end(req.qspan, outcome="shed_late")
+                req.qspan = None
             for req in sheds:
                 self._resolve_error(req, AdmissionRejected(
                     f"request {req.rid} ({req.tenant.name}) can no longer "
@@ -422,7 +496,7 @@ class AsyncServeFrontend:
         precision, following same-precision requests coalesce until the
         largest bucket is full (one dispatch per wave keeps per-request
         latency equal to wave latency — predictable, per Table II)."""
-        now = time.monotonic()
+        now = obsclock.now()
         ordered = EdfScheduler.order(self._queue)
         wave: List[_FrontendRequest] = []
         sheds: List[_FrontendRequest] = []
@@ -454,14 +528,17 @@ class AsyncServeFrontend:
         retries_before = eng.fault_stats["retries"]
         z = (wave[0].z if len(wave) == 1
              else np.concatenate([r.z for r in wave], axis=0))
-        t0 = time.monotonic()
+        t0 = obsclock.now()
         try:
             imgs = eng.generate(z)
         except Exception as err:
             self._check_remesh(eng, remesh_before)
             self._requeue_or_shed(wave, err)
             return
-        done_t = time.monotonic()
+        done_t = obsclock.now()
+        self._tracer.complete("wave_dispatch", t0, done_t, cat="frontend",
+                              precision=precision, rows=int(len(z)),
+                              reqs=len(wave))
         remeshed = self._check_remesh(eng, remesh_before)
         retried = eng.fault_stats["retries"] != retries_before
         if not remeshed and not retried and len(z) <= self._max_bucket:
@@ -495,7 +572,7 @@ class AsyncServeFrontend:
         """Dispatch failed typed: requeue requests whose deadlines still
         hold (bounded by max_requeues), shed the rest — every request
         resolves, in both directions."""
-        now = time.monotonic()
+        now = obsclock.now()
         requeue: List[_FrontendRequest] = []
         for req in wave:
             if (req.requeues < self._max_requeues
@@ -510,6 +587,12 @@ class AsyncServeFrontend:
             with self._slock:
                 for req in requeue:
                     self._tenant_stats[req.tenant.name]["requeued"] += 1
+            for req in requeue:
+                self._m_req.inc(tenant=req.tenant.name, outcome="requeued")
+                req.qspan = self._tracer.begin(
+                    "queue_wait", cat="frontend", rid=req.rid,
+                    tenant=req.tenant.name, rows=req.rows,
+                    requeue=req.requeues)
             with self._cond:
                 self._queue[:0] = requeue
                 self._cond.notify()

@@ -12,6 +12,9 @@ from repro.analysis.check.bench_schema import ROW_KEYS, SECTIONS
 
 def _doc():
     doc = {name: typ() for name, typ in SECTIONS.items()}
+    doc["table2"] = [{
+        "net": "dcnn-mnist", "precision": "fp32", "bucket": 4, "calls": 5,
+        "mean_s": 0.01, "std_s": 0.001, "cv": 0.1, "tainted_calls": 0}]
     doc["traffic"] = [{
         "net": "dcnn-mnist", "layer": "L1", "in_bytes_per_tile": 4096,
         "halo_total_bytes": 65536, "full_image_total_bytes": 262144,
@@ -34,10 +37,36 @@ def test_wellformed_doc_is_clean():
     assert report.ok(strict=True), report.render(strict=True)
 
 
-def test_smoke_doc_with_empty_table2_is_clean():
+def test_empty_table2_fires_rows_rule():
+    # pre-obs behavior (smoke mode skipping the timing sweep entirely) is
+    # exactly the regression bench.table2_rows exists to catch
     doc = _doc()
-    doc["table2"] = []          # smoke mode skips the timing sweep
+    doc["table2"] = []
+    assert _fired(check_bench_doc(doc)) == ["bench.table2_rows"]
+
+
+def test_legacy_sweep_table2_row_is_clean():
+    doc = _doc()
+    doc["table2"] = [{
+        "net": "dcnn-mnist", "layer": "L1", "rl_gops": 1.0, "rl_cv": 0.1,
+        "zi_gops": 0.5, "zi_cv": 0.2, "useful_mac_ratio_zi": 0.25,
+        "rl_us": 10.0, "zi_us": 20.0}]
     assert check_bench_doc(doc).ok(strict=True)
+
+
+def test_table2_row_matching_neither_schema_fires():
+    doc = _doc()
+    doc["table2"] = [{"net": "dcnn-mnist", "mean_s": 0.01}]
+    assert _fired(check_bench_doc(doc)) == ["bench.table2_rows"]
+
+
+def test_table2_cv_over_ceiling_fires():
+    doc = _doc()
+    doc["table2"][0]["cv"] = 2.5
+    report = check_bench_doc(doc)
+    assert _fired(report) == ["bench.table2_cv"]
+    v, = report.errors()
+    assert v.location == "table2[0]"
 
 
 def test_missing_section_fires_sections():
