@@ -418,6 +418,46 @@ def print_table2_obs(rows):
     print(render_table2(rows))
 
 
+def workloads_rows(workload_names=("sr", "denoise"), buckets=(1, 2, 4),
+                   calls=3, precisions=("fp32", "int8")):
+    """The workload zoo through the serving engine: each registered
+    workload (SR head, denoising decoder, ...) is resolved from the
+    registry by name, planned and served at every bucket x precision,
+    and the dispatch histogram reduces to per-workload Table II rows —
+    the model-agnosticity proof that new deconv towers get the same
+    run-to-run-stability accounting as the paper's generators."""
+    import repro.workloads as workloads
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.report import table2_rows
+    from repro.serve import DcnnServeEngine, EngineConfig
+
+    reg = MetricsRegistry()
+    for name in workload_names:
+        w = workloads.get(name)
+        params, _ = w.init(jax.random.PRNGKey(0))
+        for precision in precisions:
+            eng = DcnnServeEngine.from_config(
+                EngineConfig(model=name, backend="pallas",
+                             precision=precision, buckets=tuple(buckets),
+                             warmup=True, calib_batch=16),
+                params, metrics=reg)
+            for c in range(calls):
+                for b in buckets:
+                    x = w.calibration_batch(c + 1, b)
+                    eng.generate(np.asarray(x, np.float32))
+            eng.close()
+    return table2_rows(reg)
+
+
+def print_workloads(rows):
+    from repro.obs.report import render_table2
+
+    print("# workload zoo (repro.workloads): SR / denoising heads served "
+          "through the bucketed engine, Table II statistics per "
+          "workload x precision x bucket")
+    print(render_table2(rows))
+
+
 def serving_sweep_rows(reps: int = 3, stream=(3, 5, 1, 8, 2, 6, 4, 7)):
     """Bucketed serving engine on the MNIST generator: a mixed-size request
     stream through `DcnnServeEngine.submit/collect`, reporting end-to-end
@@ -767,7 +807,7 @@ def print_slo(row):
 
 def write_json(path: str, table2, traffic, autotune, scaling,
                batch_sweep=None, serving=None, sharded=None, quant=None,
-               plan=None, degraded=None, slo=None):
+               plan=None, degraded=None, slo=None, workloads=None):
     with open(path, "w") as f:
         json.dump({"table2": table2, "traffic": traffic,
                    "autotune": autotune, "scaling": scaling,
@@ -777,7 +817,8 @@ def write_json(path: str, table2, traffic, autotune, scaling,
                    "quant": quant or [],
                    "plan": plan or [],
                    "degraded": degraded or {},
-                   "slo": slo or {}},
+                   "slo": slo or {},
+                   "workloads": workloads or []},
                   f, indent=1, default=float)
     print(f"[bench_deconv] wrote {path}")
 
@@ -861,7 +902,10 @@ def main(reps: int = 50, smoke: bool = False,
         t2_rows = table2_obs_rows(
             specs=((MNIST_DCNN, ("fp32", "int8")), (CELEBA_DCNN, ("fp32",))),
             buckets=(1, 2, 4), calls=4)
+        w_rows = workloads_rows(buckets=(1, 2), calls=2)
         print_table2_obs(t2_rows)
+        print()
+        print_workloads(w_rows)
         print()
         print_traffic(t_rows)
         print()
@@ -883,7 +927,8 @@ def main(reps: int = 50, smoke: bool = False,
         print()
         print_plan_rows(p_rows)
         write_json(json_path, t2_rows, t_rows, a_rows, s_rows, b_rows,
-                   serving, sharded, q_rows, p_rows, degraded, slo)
+                   serving, sharded, q_rows, p_rows, degraded, slo,
+                   workloads=w_rows)
         return t2_rows
     rows = run(reps)
     print("# Table II analogue: GOps/s mean (cv) per layer; cv = run-to-run "
@@ -933,10 +978,14 @@ def main(reps: int = 50, smoke: bool = False,
     print()
     t2_rows = table2_obs_rows(calls=max(4, reps // 5))
     print_table2_obs(t2_rows)
+    print()
+    w_rows = workloads_rows(calls=max(3, reps // 10))
+    print_workloads(w_rows)
     # the artifact carries both shapes (legacy sweep + obs statistics);
     # callers iterating the return value still get only the sweep rows
     write_json(json_path, rows + t2_rows, t_rows, a_rows, s_rows, b_rows,
-               serving, sharded, q_rows, p_rows, degraded, slo)
+               serving, sharded, q_rows, p_rows, degraded, slo,
+               workloads=w_rows)
     return rows
 
 

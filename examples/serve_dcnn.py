@@ -35,7 +35,8 @@ import time
 import jax
 import numpy as np
 
-from repro.models.dcnn import CELEBA_DCNN, MNIST_DCNN, generator_init
+import repro.workloads as workloads
+from repro.models.dcnn import generator_init
 from repro.serve import (AdmissionRejected, AsyncServeFrontend,
                          DcnnServeEngine, EngineConfig, TenantClass)
 
@@ -54,7 +55,7 @@ def run_async(cfg, params, args):
         rids, rejected = [], 0
         for i in range(args.reqs):
             n = args.batch if i % 3 else max(1, args.batch - i % 5)
-            z = rng.randn(n, cfg.z_dim).astype(np.float32)
+            z = rng.randn(n, *cfg.input_shape).astype(np.float32)
             try:
                 rids.append(fe.submit(z, "gold" if i % 2 == 0 else "std"))
             except AdmissionRejected as e:
@@ -80,7 +81,10 @@ def run_async(cfg, params, args):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--net", choices=["mnist", "celeba"], default="mnist")
+    ap.add_argument("--net", default="mnist", metavar="WORKLOAD",
+                    help="a registered repro.workloads name "
+                         f"({', '.join(workloads.names())}); unknown "
+                         "names fail typed, never fall back")
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--reqs", type=int, default=20)
     ap.add_argument("--backend", default="reverse_loop",
@@ -101,7 +105,11 @@ def main():
 
         obstrace.enable(clear=True)
 
-    cfg = MNIST_DCNN if args.net == "mnist" else CELEBA_DCNN
+    try:
+        cfg = workloads.resolve_model(args.net)
+    except workloads.WorkloadError as e:
+        print(e)
+        sys.exit(2)
     params, _ = generator_init(jax.random.PRNGKey(0), cfg)
     try:
         if args.use_async:
@@ -150,7 +158,7 @@ def run_sync(cfg, params, args):
     for i in range(args.reqs):
         # mixed sizes: full batches interleaved with ragged stragglers
         n = args.batch if i % 3 else max(1, args.batch - i % 5)
-        z = rng.randn(n, cfg.z_dim).astype(np.float32)
+        z = rng.randn(n, *cfg.input_shape).astype(np.float32)
         t0 = time.perf_counter()
         rid = eng.submit(z)
         imgs = eng.collect(rid)

@@ -20,7 +20,7 @@ from .rules import CheckReport, Severity, rule
 SECTIONS = {
     "table2": list, "traffic": list, "autotune": list, "scaling": list,
     "batch_sweep": list, "serving": dict, "sharded": dict, "quant": list,
-    "plan": list, "degraded": dict, "slo": dict,
+    "plan": list, "degraded": dict, "slo": dict, "workloads": list,
 }
 
 #: obs-produced Table II rows (`repro.obs.report.table2_rows`) carry the
@@ -178,8 +178,45 @@ def check_table2_cv(r, doc):
     return out
 
 
+#: workload-zoo serving rows: Table II statistics labeled by registry
+#: workload (the zoo's proof that new towers serve with the same
+#: run-to-run stability as the paper's generators)
+WORKLOADS_ROW_KEYS = ("workload", "net", "precision", "bucket", "calls",
+                      "mean_s", "cv")
+
+
+@rule("bench.workloads_rows",
+      "the workloads section is empty or a row is malformed")
+def check_workloads_rows(r, doc):
+    out = []
+    if not isinstance(doc, dict) or not isinstance(
+            doc.get("workloads"), list):
+        return out          # shape problems are bench.sections' findings
+    rows = doc["workloads"]
+    if not rows:
+        return [r.violation(
+            "workloads is empty: the bench no longer serves the workload "
+            "zoo (SR / denoising heads) through the engine",
+            location="workloads",
+            fix_hint="smoke mode must emit bench_deconv.workloads_rows")]
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            out.append(r.violation(f"row {i} is not an object",
+                                   location=f"workloads[{i}]"))
+            continue
+        missing = [k for k in WORKLOADS_ROW_KEYS if k not in row]
+        if missing:
+            out.append(r.violation(
+                f"row {i} missing key(s) {', '.join(missing)}",
+                location=f"workloads[{i}]",
+                fix_hint="a key rename in obs/report.py or "
+                         "bench_deconv.py must update WORKLOADS_ROW_KEYS"))
+    return out
+
+
 BENCH_RULES = ("bench.sections", "bench.keys", "bench.nan",
-               "bench.table2_rows", "bench.table2_cv")
+               "bench.table2_rows", "bench.table2_cv",
+               "bench.workloads_rows")
 
 
 def check_bench_doc(doc, name: str = "BENCH_deconv.json") -> CheckReport:
@@ -190,6 +227,7 @@ def check_bench_doc(doc, name: str = "BENCH_deconv.json") -> CheckReport:
     report.extend(check_finite(doc))
     report.extend(check_table2_rows(doc))
     report.extend(check_table2_cv(doc))
+    report.extend(check_workloads_rows(doc))
     return report
 
 

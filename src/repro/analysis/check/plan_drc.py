@@ -13,6 +13,9 @@ JSON) **without executing anything**:
   internally consistent;
 * ``drc.geometry_chain`` — layer i's output extents/channels feed
   layer i+1's input exactly;
+* ``drc.input_root``     — the tower's first-layer input (1x1 latent
+  root or H×W×C image root) and last-layer output match what the plan's
+  declared `repro.workloads` entry expects;
 * ``drc.scale_chain``    — the int8 requant chain: layer i's
   ``out_scale`` must equal layer i+1's input quant scale, epilogue
   widths must follow the int8-in-HBM convention (intermediates int8,
@@ -189,6 +192,55 @@ def check_geometry_chain(r, plan) -> List[PlanRuleViolation]:
                 layer=i + 1,
                 fix_hint="the layer list was edited after pinning; "
                          "re-plan from the network config"))
+    return out
+
+
+@rule("drc.input_root",
+      "tower root/head geometry matches the plan's declared workload")
+def check_input_root(r, plan) -> List[PlanRuleViolation]:
+    """Image-rooted towers (SR heads, denoising decoders) enter at
+    in_hw x in_hw x in_c rather than the WGAN 1x1 latent root; this rule
+    pins the first layer's input and the last layer's output to whatever
+    the plan's registered workload declares, so a plan relabeled or
+    spliced across workloads fails offline instead of reshaping wrong."""
+    out: List[PlanRuleViolation] = []
+    if not plan.layers:
+        return [r.violation("plan has no layers",
+                            fix_hint="re-plan from the network config")]
+    g0 = plan.layers[0].geometry
+    if g0.in_h != g0.in_w or g0.in_h < 1:
+        out.append(r.violation(
+            f"tower root is {g0.in_h}x{g0.in_w}: roots are square "
+            "(1x1 latent or in_hw x in_hw image)", layer=0,
+            fix_hint="re-plan from the network config"))
+    wname = getattr(plan, "workload", None)
+    if wname is None:
+        return out  # legacy plan: no declared workload to check against
+    try:
+        from ...workloads import get as get_workload
+        cfg = get_workload(wname).cfg
+    except Exception:
+        # the registry is open (third-party towers register at runtime);
+        # an id this process doesn't know is not provably wrong
+        return out
+    root = (cfg.in_hw, cfg.in_hw, cfg.in_c)
+    if (g0.in_h, g0.in_w, g0.c_in) != root:
+        out.append(r.violation(
+            f"first layer consumes {g0.in_h}x{g0.in_w}x{g0.c_in} but "
+            f"workload {wname!r} declares the input root "
+            f"{root[0]}x{root[1]}x{root[2]}", layer=0,
+            fix_hint="the plan was edited or relabeled after pinning; "
+                     "re-plan from the workload's config"))
+    gl = plan.layers[-1].geometry
+    head = (cfg.img_hw, cfg.img_hw, cfg.img_c)
+    if (gl.out_h, gl.out_w, gl.c_out) != head:
+        out.append(r.violation(
+            f"last layer emits {gl.out_h}x{gl.out_w}x{gl.c_out} but "
+            f"workload {wname!r} declares the output head "
+            f"{head[0]}x{head[1]}x{head[2]}",
+            layer=len(plan.layers) - 1,
+            fix_hint="the plan was edited or relabeled after pinning; "
+                     "re-plan from the workload's config"))
     return out
 
 
@@ -429,6 +481,7 @@ def check_network_plan(
     report.extend(check_vmem_budget(plan, device))
     report.extend(check_tile_alignment(plan))
     report.extend(check_geometry_chain(plan))
+    report.extend(check_input_root(plan))
     report.extend(check_scale_chain(plan))
     report.extend(check_sparse_digest(plan, params))
     report.extend(check_bucket_mesh(plan, n_devices, buckets))
@@ -436,8 +489,9 @@ def check_network_plan(
     report.extend(check_roofline(plan, device))
     report.rules_run += [
         "drc.backend", "drc.vmem_budget", "drc.tile_alignment",
-        "drc.geometry_chain", "drc.scale_chain", "drc.sparse_digest",
-        "drc.bucket_mesh", "drc.epilogue", "drc.roofline",
+        "drc.geometry_chain", "drc.input_root", "drc.scale_chain",
+        "drc.sparse_digest", "drc.bucket_mesh", "drc.epilogue",
+        "drc.roofline",
     ]
     return report
 

@@ -1,2 +1,2 @@
 from .transformer import ModelConfig, apply_lm, init_cache, init_lm
-from .dcnn import CELEBA_DCNN, MNIST_DCNN, DcnnConfig, critic_apply, critic_init, generator_apply, generator_init
+from .dcnn import CELEBA_DCNN, MNIST_DCNN, DcnnConfig, critic_apply, critic_init, generator_apply, generator_init, tower_input

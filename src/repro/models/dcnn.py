@@ -35,19 +35,50 @@ class DeconvLayerCfg:
 
 @dataclasses.dataclass(frozen=True)
 class DcnnConfig:
+    """A deconv tower: input root -> stacked deconv layers -> image.
+
+    The original two networks are latent-rooted WGAN generators (input
+    is a flat ``(z_dim,)`` vector reshaped to a 1x1 spatial root), but
+    the tower itself is workload-agnostic: ``in_hw > 1`` declares an
+    *image-rooted* tower (super-resolution heads, denoising decoders)
+    whose input is ``(in_hw, in_hw, in_c)`` with ``in_c ==
+    layers[0].c_in``.  Every consumer of the config — kernels, plans,
+    quantization, serving — keys off `input_shape`/`geometries()`, so
+    the two roots share one execution surface (see `repro.workloads`).
+    """
+
     name: str
     z_dim: int
     img_hw: int
     img_c: int
     layers: Tuple[DeconvLayerCfg, ...]
     dtype: str = "float32"
+    in_hw: int = 1
 
     @property
     def jdtype(self):
         return jnp.dtype(self.dtype)
 
+    @property
+    def in_c(self) -> int:
+        """Input channel count of the tower root (== layers[0].c_in)."""
+        return self.layers[0].c_in
+
+    @property
+    def is_latent(self) -> bool:
+        """True for the WGAN-style 1x1 latent root (flat z input)."""
+        return self.in_hw == 1
+
+    @property
+    def input_shape(self) -> Tuple[int, ...]:
+        """Per-example input shape: ``(z_dim,)`` for latent towers,
+        ``(in_hw, in_hw, in_c)`` for image-rooted towers."""
+        if self.is_latent:
+            return (self.z_dim,)
+        return (self.in_hw, self.in_hw, self.in_c)
+
     def geometries(self) -> List[DeconvGeometry]:
-        h = w = 1
+        h = w = self.in_hw
         out = []
         for l in self.layers:
             g = DeconvGeometry(h, w, l.c_in, l.c_out, l.kernel, l.stride, l.padding)
@@ -86,6 +117,26 @@ CELEBA_DCNN = DcnnConfig(
 # ---------------------------------------------------------------------------
 # Generator
 # ---------------------------------------------------------------------------
+def tower_input(cfg: DcnnConfig, x: jax.Array) -> jax.Array:
+    """Canonicalize a tower input to the 4D root ``(B, in_hw, in_hw,
+    in_c)``.
+
+    Latent towers take flat ``(B, z_dim)`` latents (reshaped onto the
+    1x1 spatial root, the WGAN convention); image-rooted towers take
+    ``(B, in_hw, in_hw, in_c)`` images directly.  A shape that matches
+    neither is a workload mix-up (e.g. latents submitted to an SR head)
+    and fails loudly instead of reshaping into silently wrong images."""
+    expect = (cfg.in_hw, cfg.in_hw, cfg.in_c)
+    if cfg.is_latent and x.ndim == 2 and x.shape[1] == cfg.z_dim:
+        return x.reshape(x.shape[0], 1, 1, cfg.z_dim)
+    if x.ndim == 4 and tuple(x.shape[1:]) == expect:
+        return x
+    want = (f"(B, {cfg.z_dim})" if cfg.is_latent
+            else f"(B, {expect[0]}, {expect[1]}, {expect[2]})")
+    raise ValueError(
+        f"{cfg.name} expects input rows shaped {want}; got {x.shape}")
+
+
 def generator_init(key, cfg: DcnnConfig):
     ks = jax.random.split(key, len(cfg.layers))
     p: Dict[str, Any] = {}
@@ -119,7 +170,8 @@ def generator_apply(
     return_intermediates: bool = False,
     plan=None,
 ):
-    """z: (B, z_dim) -> images (B, H, W, C) in [-1, 1].
+    """z: (B, z_dim) latents — or (B, in_hw, in_hw, in_c) images for an
+    image-rooted tower — -> images (B, H, W, C) in [-1, 1].
 
     ``plan`` is a `repro.plan.NetworkPlan` (fp32 precision): the backend,
     per-layer tiles, fused epilogues and zero-skip schedules all come
@@ -144,7 +196,7 @@ def generator_apply(
                 "plan runs through quant.infer.quantized_generator_apply")
         plan.validate_for(cfg)
         backend = plan.backend
-    x = z.reshape(z.shape[0], 1, 1, cfg.z_dim).astype(cfg.jdtype)
+    x = tower_input(cfg, z).astype(cfg.jdtype)
     x = constrain(x, "batch", None, None, None)
     inters = []
     for i, l in enumerate(cfg.layers):

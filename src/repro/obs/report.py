@@ -51,6 +51,9 @@ def table2_rows(registry: MetricsRegistry,
         bucket = labels.get("bucket", "?")
         row = {
             "net": net,
+            # registry workload name (falls back to the net for series
+            # recorded before the workload label existed)
+            "workload": labels.get("workload", net),
             "precision": precision,
             "bucket": int(bucket) if str(bucket).isdigit() else str(bucket),
             "calls": stats["count"],
@@ -75,6 +78,7 @@ def table2_rows(registry: MetricsRegistry,
                      if isinstance(r["bucket"], int))
         rollup = {
             "net": net,
+            "workload": per_bucket[0]["workload"],
             "precision": precision,
             "bucket": "all",
             "calls": calls,

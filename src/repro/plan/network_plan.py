@@ -37,6 +37,9 @@ class NetworkPlan:
     batch: int
     layers: Tuple[DeconvPlan, ...]
     quant_strategy: Optional[str] = None
+    # canonical `repro.workloads` registry name (None on legacy plans
+    # pinned before the workload zoo existed — their hashes are stable)
+    workload: Optional[str] = None
     schema_version: int = PLAN_SCHEMA_VERSION
 
     def __post_init__(self):
@@ -119,12 +122,14 @@ class NetworkPlan:
     def stable_hash(self) -> str:
         import hashlib
 
-        blob = json.dumps(
-            {"schema": self.schema_version, "name": self.name,
+        d = {"schema": self.schema_version, "name": self.name,
              "backend": self.backend, "precision": self.precision,
              "batch": self.batch, "quant_strategy": self.quant_strategy,
-             "layers": [l.request_dict("full") for l in self.layers]},
-            sort_keys=True, separators=(",", ":"))
+             "layers": [l.request_dict("full") for l in self.layers]}
+        # keyed in only when set, so legacy (pre-zoo) plan hashes hold
+        if self.workload is not None:
+            d["workload"] = self.workload
+        blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(blob.encode()).hexdigest()[:24]
 
     def to_json(self, path: Optional[str] = None) -> str:
@@ -136,6 +141,7 @@ class NetworkPlan:
             "precision": self.precision,
             "batch": self.batch,
             "quant_strategy": self.quant_strategy,
+            "workload": self.workload,
             "stable_hash": self.stable_hash(),
             "layers": [l.to_json_dict() for l in self.layers],
         }, indent=1, sort_keys=True)
@@ -161,6 +167,7 @@ class NetworkPlan:
         plan = cls(
             name=d["name"], backend=d["backend"], precision=d["precision"],
             batch=int(d["batch"]), quant_strategy=d.get("quant_strategy"),
+            workload=d.get("workload"),
             layers=tuple(DeconvPlan.from_json_dict(l) for l in d["layers"]),
         )
         want = d.get("stable_hash")
@@ -266,13 +273,13 @@ def build_network_plan(
             raise ValueError(
                 "int8 planning needs either a pre-computed quant_cfg or "
                 "params to calibrate")
-        import jax
-        import jax.numpy as jnp
-
         from ..quant.calibrate import calibrate
+        from ..workloads import calibration_input
 
-        z_cal = jax.random.normal(jax.random.PRNGKey(calib_seed),
-                                  (calib_batch, cfg.z_dim), jnp.float32)
+        # N(0,1) latents for generative towers, workload-synthesized
+        # inputs for image-rooted ones; deterministic in calib_seed so
+        # the engine's independent self-calibration lands the same scales
+        z_cal = calibration_input(cfg, seed=calib_seed, batch=calib_batch)
         quant_cfg = calibrate(params, cfg, z_cal, strategy=calib_strategy)
 
     dtype = np.dtype(np.int8) if precision == "int8" else np.dtype(cfg.dtype)
@@ -303,10 +310,13 @@ def build_network_plan(
             sparse_table_cache=sparse_table_cache,
             sparse_cache_key=i,
         ))
+    from ..workloads import workload_name_for
+
     return NetworkPlan(
         name=cfg.name, backend=backend, precision=precision, batch=batch,
         layers=tuple(layers),
         quant_strategy=(quant_cfg.strategy if int8_chain else None),
+        workload=workload_name_for(cfg),
     )
 
 

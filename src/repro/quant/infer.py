@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..dist.context import constrain
-from ..models.dcnn import DcnnConfig, _tile_kwargs
+from ..models.dcnn import DcnnConfig, _tile_kwargs, tower_input
 from .calibrate import QuantConfig
 from .qmath import quantize_symmetric
 
@@ -60,7 +60,7 @@ def quantized_generator_apply(
         raise ValueError(
             f"QuantConfig has {len(qcfg.layers)} layers; "
             f"{cfg.name} has {len(cfg.layers)}")
-    x = z.reshape(z.shape[0], 1, 1, cfg.z_dim).astype(jnp.float32)
+    x = tower_input(cfg, z).astype(jnp.float32)
     x = quantize_symmetric(x, qcfg.layers[0].x_scale)
     x = constrain(x, "batch", None, None, None)
     for i, l in enumerate(cfg.layers):
@@ -95,7 +95,7 @@ def quantized_generator_ref(
     parity-tested against end to end."""
     from ..kernels.deconv2d import deconv2d_int8_ref
 
-    x = z.reshape(z.shape[0], 1, 1, cfg.z_dim).astype(jnp.float32)
+    x = tower_input(cfg, z).astype(jnp.float32)
     x = quantize_symmetric(x, qcfg.layers[0].x_scale)
     for i, l in enumerate(cfg.layers):
         lq = qp[f"l{i}"]

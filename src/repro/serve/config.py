@@ -18,7 +18,11 @@ from typing import Any, Optional, Tuple
 class EngineConfig:
     """Everything a `DcnnServeEngine` needs besides params and plans.
 
-    * ``model``     — the `models.dcnn.DcnnConfig` being served.
+    * ``model``     — the tower being served: a `models.dcnn.DcnnConfig`
+                      or a registered `repro.workloads` name ("mnist",
+                      "sr", ...).  Unknown names raise a typed
+                      `workloads.UnknownWorkloadError` at engine
+                      construction — never a silent fallback.
     * ``backend``   — deconv formulation ("pallas", "pallas_sparse",
                       "reverse_loop", "xla").
     * ``precision`` — "fp32" or "int8" (the calibrated Pallas chain).

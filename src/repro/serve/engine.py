@@ -320,9 +320,14 @@ class DcnnServeEngine:
 
     def _setup(self, config: EngineConfig, params, plan,
                fault_injector=None, metrics=None) -> None:
-        cfg = config.model
+        from ..workloads import resolve_model, workload_name_for
+
+        # a string model is a registry lookup (typed UnknownWorkloadError
+        # on a typo — never a silent fallback); a DcnnConfig passes through
+        cfg = resolve_model(config.model)
         self.config = config
         self.cfg = cfg
+        self.workload = workload_name_for(cfg)
         self.backend = config.backend
         # chunk-planning knob: one kernel dispatch is costed like computing
         # this many extra rows (trades padded-row waste against call count)
@@ -363,13 +368,16 @@ class DcnnServeEngine:
                         "executables)")
         if self.precision == "int8":
             from ..quant.calibrate import calibrate, quantize_params
+            from ..workloads import calibration_input
             if self.quant_cfg is None:
-                # self-calibrate on the serving input distribution
-                # (z ~ N(0, 1)): a fixed-seed batch through the fp32
-                # reference chain, observed by the chosen strategy
-                z_cal = jax.random.normal(
-                    jax.random.PRNGKey(config.calib_seed),
-                    (config.calib_batch, cfg.z_dim), jnp.float32)
+                # self-calibrate on the serving input distribution — a
+                # fixed-seed batch (z ~ N(0,1) latents, or the registered
+                # workload's synthesized inputs for image-rooted towers)
+                # through the fp32 reference chain, observed by the
+                # chosen strategy.  Same (seed, batch) routing as
+                # build_network_plan, so scales agree with pinned plans.
+                z_cal = calibration_input(cfg, seed=config.calib_seed,
+                                          batch=config.calib_batch)
                 self.quant_cfg = calibrate(params, cfg, z_cal,
                                            strategy=config.calib_strategy)
             params = quantize_params(params, cfg, self.quant_cfg)
@@ -411,7 +419,8 @@ class DcnnServeEngine:
         self.metrics = (metrics if metrics is not None
                         else obsmetrics.MetricsRegistry())
         self._tracer = obstrace.get_tracer()
-        self._mlabels = {"net": cfg.name, "precision": self.precision}
+        self._mlabels = {"net": cfg.name, "workload": self.workload,
+                         "precision": self.precision}
         self._m_dispatch = self.metrics.histogram(
             "engine.dispatch_seconds",
             "healthy steady-state dispatch wall clock (Table II samples)")
@@ -588,7 +597,7 @@ class DcnnServeEngine:
 
     def _warmup_bucket(self, bucket: int) -> None:
         fn = self._get_fn(bucket)
-        z = jnp.zeros((bucket, self.cfg.z_dim), self.cfg.jdtype)
+        z = jnp.zeros((bucket,) + self.cfg.input_shape, self.cfg.jdtype)
         jax.block_until_ready(fn(self.params, z))
 
     # -- guarded dispatch + elastic recovery ---------------------------
@@ -943,8 +952,8 @@ class DcnnServeEngine:
         error).  Thread-safe: concurrent submitters get distinct
         tickets."""
         z = np.asarray(z, dtype=self.cfg.dtype)
-        if z.ndim == 1:
-            z = z[None, :]
+        if z.ndim == len(self.cfg.input_shape):
+            z = z[None]
         if deadline_s is None:
             deadline_s = self.config.default_deadline_s
         deadline = (None if deadline_s is None

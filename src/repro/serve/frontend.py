@@ -115,8 +115,10 @@ class AsyncServeFrontend:
                 "across precisions")
         self._buckets = engines[FP32].buckets
         self._max_bucket = engines[FP32].max_bucket
-        self._zdim = engines[FP32].cfg.z_dim
+        self._input_shape = engines[FP32].cfg.input_shape
         self._dtype = engines[FP32].cfg.dtype
+        self._workload = getattr(engines[FP32], "workload",
+                                 engines[FP32].cfg.name)
         if not tenants:
             raise ValueError("at least one TenantClass is required")
         self._tenants: Dict[str, TenantClass] = {}
@@ -227,7 +229,7 @@ class AsyncServeFrontend:
         worker owns it once started and traffic is flowing)."""
         for precision, eng in self._engines.items():
             for b in eng.buckets:
-                z = np.zeros((b, self._zdim), self._dtype)
+                z = np.zeros((b,) + self._input_shape, self._dtype)
                 for r in range(reps + 1):
                     t0 = obsclock.now()
                     eng.generate(z)
@@ -249,8 +251,8 @@ class AsyncServeFrontend:
             raise ValueError(f"unknown tenant {tenant!r}; classes: "
                              f"{sorted(self._tenants)}")
         z = np.asarray(z, dtype=self._dtype)
-        if z.ndim == 1:
-            z = z[None, :]
+        if z.ndim == len(self._input_shape):
+            z = z[None]
         if z.shape[0] == 0:
             raise ValueError("empty request: z has no rows")
         now = obsclock.now()
@@ -375,6 +377,7 @@ class AsyncServeFrontend:
             queue_rows = sum(r.rows for r in self._queue)
             inflight_rows = sum(r.rows for r in self._inflight)
         return {
+            "workload": self._workload,
             "tenants": tenants,
             "queue_rows": queue_rows,
             "inflight_rows": inflight_rows,

@@ -1,0 +1,221 @@
+"""Supervised reconstruction training for image-rooted deconv towers.
+
+`SupervisedTrainer` is the reconstruction-loss twin of
+`train.wgan.WganTrainer`, built for the workload zoo's supervised heads
+(super-resolution, denoising): the same power-of-two bucketing with
+exact masked sum/n_valid loss accounting over pad rows, the same
+per-bucket compiled-executable caching with `trace_counts` as the
+no-retrace probe, and — with ``backend="pallas"`` — the same
+`build_network_plan` -> `make_fused_generator` path the serving engine
+runs, so a training step fills the MXU exactly the way serving does and
+`plan_fingerprints()` proves it (hash-asserted against an optional
+pinned serve-side plan, `WganTrainer` semantics).
+
+The objective is per-pixel masked MSE between the tower's output and
+the target image — the reconstruction loss both SRCNN/ESPCN-style SR
+and denoising autoencoders train with.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..data.pipeline import StepIndexedSource
+from ..models.dcnn import (DcnnConfig, generator_apply, generator_init,
+                           make_fused_generator)
+
+__all__ = ["SupervisedTrainer", "pair_source", "train_supervised"]
+
+
+def pair_source(workload, seed: int, batch: int) -> StepIndexedSource:
+    """Step-indexed ``{"x": inputs, "y": targets}`` source from a
+    registered supervised workload's pair synthesizer (pure in
+    (seed, step), so training is deterministically resumable)."""
+    def fn(step):
+        x, y = workload.training_pairs(seed + step, batch)
+        return {"x": x, "y": y}
+
+    return StepIndexedSource(fn)
+
+
+class SupervisedTrainer:
+    """Bucketed masked-MSE trainer for image-in/image-out towers.
+
+    ``step(p, state, x, y, key=None)`` takes a (possibly ragged) batch of
+    (input, target) images, pads it to its power-of-two bucket, and runs
+    the bucket's compiled update — pad rows are masked out of the loss
+    with exact sum/n_valid accounting, so a ragged final batch reuses the
+    executable without perturbing the gradient."""
+
+    def __init__(self, cfg: DcnnConfig, opt, *,
+                 backend: str = "reverse_loop",
+                 autotune: bool = True, refine: bool = False,
+                 plan=None):
+        if backend == "pallas_sparse":
+            raise ValueError(
+                "pallas_sparse is inference-only: the static zero-skip "
+                "plan is derived from frozen weights, which training "
+                "updates each step")
+        if backend not in ("reverse_loop", "xla", "pallas"):
+            raise ValueError(f"unknown training backend {backend!r}")
+        if plan is not None:
+            if backend != "pallas":
+                raise ValueError(
+                    "a pinned NetworkPlan needs backend='pallas' (plans "
+                    f"pin the fused serving kernels); got {backend!r}")
+            if plan.backend != "pallas" or plan.precision != "fp32":
+                raise ValueError(
+                    "training consumes fp32 pallas plans; got "
+                    f"backend={plan.backend!r} / "
+                    f"precision={plan.precision!r}")
+            plan.validate_for(cfg)
+        self.cfg = cfg
+        self.opt = opt
+        self.backend = backend
+        self._autotune = autotune
+        self._refine = refine
+        self._pinned_plan = plan
+        self._fns: Dict[int, Callable] = {}
+        self._gen_apply: Dict[int, Callable] = {}
+        self.trace_counts: Dict[int, int] = {}
+        self.tile_choices: Dict[int, Optional[dict]] = {}
+        self.plans: Dict[int, Any] = {}
+
+    # -- bucketing ------------------------------------------------------
+    def bucket_for(self, n: int) -> int:
+        """Smallest power-of-two >= n (cf. serve.pow2_buckets)."""
+        if n < 1:
+            raise ValueError(f"batch must be >= 1 (got {n})")
+        b = 1
+        while b < n:
+            b <<= 1
+        return b
+
+    # -- generator forward for the loss path ----------------------------
+    def _gen_for(self, bucket: int) -> Callable:
+        if bucket not in self._gen_apply:
+            if self.backend == "pallas":
+                from ..plan import build_network_plan
+                pinned = self._pinned_plan
+                plan = build_network_plan(
+                    self.cfg, batch=bucket, backend="pallas",
+                    autotune=self._autotune, refine=self._refine)
+                if pinned is not None and plan.batch == pinned.batch:
+                    # hash-asserted parity with the serve-side plan
+                    if plan.stable_hash() != pinned.stable_hash():
+                        raise ValueError(
+                            f"trainer-built plan for batch {bucket} "
+                            f"({plan.stable_hash()}) does not match the "
+                            f"pinned serve-side plan "
+                            f"({pinned.stable_hash()}); training would "
+                            "fill the MXU differently than serving — "
+                            "re-pin one side")
+                    plan = pinned
+                self.plans[bucket] = plan
+                self.tile_choices[bucket] = plan.tile_overrides()
+                self._gen_apply[bucket] = make_fused_generator(
+                    self.cfg, plan=plan)
+            else:
+                backend = self.backend
+                self._gen_apply[bucket] = (
+                    lambda p, x, _b=backend: generator_apply(
+                        p, self.cfg, x, backend=_b))
+        return self._gen_apply[bucket]
+
+    # -- step construction ----------------------------------------------
+    def _build_fn(self, bucket: int) -> Callable:
+        gen_fn = self._gen_for(bucket)
+        opt = self.opt
+        out_elems = float(self.cfg.img_hw * self.cfg.img_hw
+                          * self.cfg.img_c)
+
+        def body(p, state, x, y, nv):
+            rows = jnp.arange(bucket)
+
+            def loss_fn(p_):
+                pred = gen_fn(p_, x)
+                mask = (rows < nv).astype(pred.dtype)
+                per_row = jnp.sum((pred - y.astype(pred.dtype)) ** 2,
+                                  axis=(1, 2, 3))
+                # masked mean over valid pixels: pad rows contribute
+                # exactly zero and the divisor is the true batch size
+                return jnp.sum(per_row * mask) / (
+                    jnp.asarray(nv, pred.dtype) * out_elems)
+
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p, state = opt.update(grads, state, p)
+            return p, state, {"loss": loss}
+
+        def traced(*args):
+            self.trace_counts[bucket] = self.trace_counts.get(bucket, 0) + 1
+            return body(*args)
+
+        return jax.jit(traced)
+
+    # -- public API ------------------------------------------------------
+    def init_state(self, key):
+        p, _ = generator_init(key, self.cfg)
+        return p, self.opt.init(p)
+
+    def step(self, p, state, x, y):
+        """One update on a (possibly ragged) batch of (input, target)
+        image pairs; returns ``(params, opt_state, {"loss": ...})``."""
+        dt = jnp.dtype(self.cfg.dtype)
+        x = jnp.asarray(x, dt)
+        y = jnp.asarray(y, dt)
+        if x.shape[0] != y.shape[0]:
+            raise ValueError(
+                f"input/target batches disagree: {x.shape[0]} vs "
+                f"{y.shape[0]}")
+        n = x.shape[0]
+        bucket = self.bucket_for(n)
+        if bucket > n:
+            pad = bucket - n
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+            y = jnp.concatenate(
+                [y, jnp.zeros((pad,) + y.shape[1:], y.dtype)], axis=0)
+        if bucket not in self._fns:
+            self._fns[bucket] = self._build_fn(bucket)
+        nv = jnp.asarray(n, jnp.int32)  # dynamic: no retrace per raggedness
+        return self._fns[bucket](p, state, x, y, nv)
+
+    @property
+    def total_compiles(self) -> int:
+        return sum(self.trace_counts.values())
+
+    def plan_fingerprints(self) -> Dict[int, str]:
+        """{batch -> stable hash} of the plans the forward actually ran
+        (pallas backend) — compare against the serve engine's to prove
+        training and serving pin the same executables."""
+        from ..plan import executable_fingerprints
+        return executable_fingerprints(self.plans.values())
+
+    # -- training loop ----------------------------------------------------
+    def fit(self, source, steps: int, key, log_every: int = 50):
+        """Train for ``steps`` steps over a step-indexed pair source
+        (anything exposing ``batch(step) -> {"x": ..., "y": ...}``; see
+        `pair_source`).  Returns ``(params, history)``."""
+        p, state = self.init_state(key)
+        history: List[dict] = []
+        for step in range(steps):
+            rec = source.batch(step)
+            p, state, met = self.step(p, state, rec["x"], rec["y"])
+            if step % log_every == 0 or step == steps - 1:
+                history.append({"step": step, "loss": float(met["loss"])})
+        return p, history
+
+
+def train_supervised(workload, steps: int, key, opt, *, batch: int = 8,
+                     seed: int = 0, backend: str = "reverse_loop",
+                     **kwargs):
+    """Train a registered supervised workload end to end: synthesize its
+    pair source, run ``steps`` bucketed updates, return
+    ``(params, trainer, history)`` (the trainer for its pinned plans)."""
+    trainer = SupervisedTrainer(workload.cfg, opt, backend=backend,
+                                **kwargs)
+    src = pair_source(workload, seed, batch)
+    p, history = trainer.fit(src, steps, key)
+    return p, trainer, history

@@ -94,7 +94,8 @@ class WganTrainer:
                  n_critic: int = 5, gp_coef: float = 10.0,
                  backend: str = "reverse_loop",
                  autotune: bool = True, refine: bool = False,
-                 mesh=None, rules=None, z_shards: Optional[int] = None):
+                 mesh=None, rules=None, z_shards: Optional[int] = None,
+                 plan=None):
         if n_critic < 1:
             raise ValueError(
                 f"n_critic must be >= 1 (got {n_critic}): the generator "
@@ -130,6 +131,22 @@ class WganTrainer:
             # z_shards replays the mesh's per-shard key-splitting on one
             # device: trainer(mesh 8-way) == trainer(z_shards=8) exactly
             self.shards = z_shards or 1
+        # optional pinned serve-side NetworkPlan: the trainer's bucket
+        # whose per-shard sub-batch matches plan.batch runs *exactly* that
+        # executable configuration (hash-asserted in _gen_for), so
+        # training and serving provably share one plan
+        if plan is not None:
+            if backend != "pallas":
+                raise ValueError(
+                    "a pinned NetworkPlan needs backend='pallas' (plans "
+                    f"pin the fused serving kernels); got {backend!r}")
+            if plan.backend != "pallas" or plan.precision != "fp32":
+                raise ValueError(
+                    "training consumes fp32 pallas plans; got "
+                    f"backend={plan.backend!r} / "
+                    f"precision={plan.precision!r}")
+            plan.validate_for(cfg)
+        self._pinned_plan = plan
         # bucket -> compiled step; trace_counts is the no-retrace probe
         self._critic_fns: Dict[int, Callable] = {}
         self._gen_fns: Dict[int, Callable] = {}
@@ -137,6 +154,9 @@ class WganTrainer:
         self.trace_counts: Dict[str, Dict[int, int]] = {"critic": {},
                                                         "gen": {}}
         self.tile_choices: Dict[int, Optional[dict]] = {}
+        # bucket -> NetworkPlan the generator forward actually runs
+        # (pallas backend only) — what plan_fingerprints() reports
+        self.plans: Dict[int, Any] = {}
 
     # -- bucketing ------------------------------------------------------
     def bucket_for(self, n: int) -> int:
@@ -159,14 +179,29 @@ class WganTrainer:
         reverse-loop VJP, or the plain differentiable backends."""
         if bucket not in self._gen_apply:
             if self.backend == "pallas":
-                from ..kernels.autotune import network_tiles
-                tiles = network_tiles(
-                    self.cfg, self.cfg.jdtype, backend="pallas",
-                    batch=self._local(bucket), refine=self._refine,
-                    autotune=self._autotune)
-                self.tile_choices[bucket] = tiles
+                from ..plan import build_network_plan
+                local = self._local(bucket)
+                pinned = self._pinned_plan
+                plan = build_network_plan(
+                    self.cfg, batch=local, backend="pallas",
+                    autotune=self._autotune, refine=self._refine)
+                if pinned is not None and plan.batch == pinned.batch:
+                    # hash-asserted parity with the serve-side plan: the
+                    # bucket that matches the pinned per-device batch must
+                    # resolve to the identical executable configuration
+                    if plan.stable_hash() != pinned.stable_hash():
+                        raise ValueError(
+                            f"trainer-built plan for per-shard batch "
+                            f"{local} ({plan.stable_hash()}) does not "
+                            f"match the pinned serve-side plan "
+                            f"({pinned.stable_hash()}); training would "
+                            "fill the MXU differently than serving — "
+                            "re-pin one side")
+                    plan = pinned
+                self.plans[bucket] = plan
+                self.tile_choices[bucket] = plan.tile_overrides()
                 self._gen_apply[bucket] = make_fused_generator(
-                    self.cfg, tiles, fwd_backend=self.backend)
+                    self.cfg, plan=plan)
             else:
                 backend = self.backend
                 self._gen_apply[bucket] = (
@@ -314,6 +349,14 @@ class WganTrainer:
     def total_compiles(self) -> int:
         return sum(v for d in self.trace_counts.values()
                    for v in d.values())
+
+    def plan_fingerprints(self) -> Dict[int, str]:
+        """{per-shard batch -> stable hash} of the plans the generator
+        forward actually ran (pallas backend) — compare against the serve
+        engine's `plans` to prove training and serving pin the same
+        executables (`plan.executable_fingerprints` semantics)."""
+        from ..plan import executable_fingerprints
+        return executable_fingerprints(self.plans.values())
 
     # -- training loop ----------------------------------------------------
     def init_state(self, key):

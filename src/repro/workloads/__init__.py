@@ -1,0 +1,26 @@
+"""Workload zoo: named deconv towers on the plan surface.
+
+`registry` is the mechanism (register/resolve typed lookups plus
+calibration-input synthesis); `zoo` registers the built-ins — the two
+paper WGAN generators and the super-resolution / denoising heads the
+paper motivates edge DCNN inference with.  Importing this package
+registers the zoo."""
+from .registry import (UnknownWorkloadError, Workload, WorkloadError,
+                       calibration_input, get, names, register,
+                       resolve_model, workload_for, workload_name_for)
+from .zoo import DAE_DENOISE, SR_X2
+
+__all__ = [
+    "Workload",
+    "WorkloadError",
+    "UnknownWorkloadError",
+    "register",
+    "get",
+    "names",
+    "resolve_model",
+    "workload_for",
+    "workload_name_for",
+    "calibration_input",
+    "SR_X2",
+    "DAE_DENOISE",
+]

@@ -25,6 +25,9 @@ def _doc():
     doc["scaling"] = [{
         "in_hw": 16, "out_hw": 32, "halo_in_bytes_per_tile": 4096,
         "full_in_bytes_per_tile": 16384, "n_tiles": 4}]
+    doc["workloads"] = [{
+        "workload": "sr", "net": "sr-espcn-x2", "precision": "fp32",
+        "bucket": 4, "calls": 3, "mean_s": 0.01, "cv": 0.1}]
     return doc
 
 
@@ -67,6 +70,23 @@ def test_table2_cv_over_ceiling_fires():
     assert _fired(report) == ["bench.table2_cv"]
     v, = report.errors()
     assert v.location == "table2[0]"
+
+
+def test_empty_workloads_fires_rows_rule():
+    # dropping the zoo from the smoke run is the regression
+    # bench.workloads_rows exists to catch
+    doc = _doc()
+    doc["workloads"] = []
+    assert _fired(check_bench_doc(doc)) == ["bench.workloads_rows"]
+
+
+def test_workloads_row_missing_key_fires():
+    doc = _doc()
+    del doc["workloads"][0]["workload"]
+    report = check_bench_doc(doc)
+    assert _fired(report) == ["bench.workloads_rows"]
+    v, = report.errors()
+    assert "workload" in v.message and v.location == "workloads[0]"
 
 
 def test_missing_section_fires_sections():

@@ -197,6 +197,78 @@ def test_unloadable_plan_fires_schema(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# image-rooted (workload zoo) towers: drc.input_root
+# ---------------------------------------------------------------------------
+def test_clean_image_rooted_plans_are_drc_clean():
+    from repro.workloads import DAE_DENOISE, SR_X2
+
+    for cfg in (SR_X2, DAE_DENOISE):
+        plan = build_network_plan(cfg, batch=4, backend="pallas")
+        report = check_network_plan(plan)
+        assert report.ok(strict=True), report.render(strict=True)
+        assert "drc.input_root" in report.rules_run
+
+
+def test_latent_root_spliced_into_sr_fires_input_root(tmp_path):
+    from repro.workloads import SR_X2
+
+    plan = build_network_plan(SR_X2, batch=4, backend="pallas")
+
+    def edit(doc):
+        # the mix-up this rule exists for: a 1x1 latent root smuggled
+        # into a pinned SR plan (first layer no longer consumes images)
+        g = doc["layers"][0]["geometry"]
+        g["in_h"] = g["in_w"] = 1
+
+    report = check_plan_json(_mutate_json(plan, edit, tmp_path))
+    assert "drc.input_root" in _fired(report), report.render()
+    v = report.by_rule()["drc.input_root"][0]
+    assert v.layer == 0 and "14x14x1" in v.message
+
+
+def test_bad_sr_geometry_chain_fires(tmp_path):
+    from repro.workloads import SR_X2
+
+    plan = build_network_plan(SR_X2, batch=4, backend="pallas")
+
+    def edit(doc):
+        doc["layers"][1]["geometry"]["in_h"] = 28   # layer 0 emits 14
+
+    report = check_plan_json(_mutate_json(plan, edit, tmp_path))
+    fired = _fired(report)
+    assert "drc.geometry_chain" in fired, report.render()
+    # the mutated middle layer also breaks squareness of nothing at the
+    # root — input_root must NOT misfire on an interior edit
+    assert "drc.input_root" not in fired
+
+
+def test_relabeled_workload_fires_input_root(tmp_path):
+    from repro.workloads import SR_X2
+
+    plan = build_network_plan(SR_X2, batch=4, backend="pallas")
+
+    def edit(doc):
+        doc["workload"] = "denoise"     # denoise declares a 28x28x1 root
+
+    report = check_plan_json(_mutate_json(plan, edit, tmp_path))
+    assert "drc.input_root" in _fired(report), report.render()
+
+
+def test_unregistered_workload_id_skips_input_root(tmp_path):
+    """The registry is open: a plan pinned by a process that registered
+    a third-party tower must not fail DRC in a process that didn't."""
+    from repro.workloads import SR_X2
+
+    plan = build_network_plan(SR_X2, batch=4, backend="pallas")
+
+    def edit(doc):
+        doc["workload"] = "some-third-party-tower"
+
+    report = check_plan_json(_mutate_json(plan, edit, tmp_path))
+    assert report.ok(strict=True), report.render(strict=True)
+
+
+# ---------------------------------------------------------------------------
 # engine integration: typed rejection before any compile
 # ---------------------------------------------------------------------------
 def test_from_config_rejects_corrupt_plan_before_compile(monkeypatch):
@@ -241,11 +313,12 @@ def test_rule_registry_covers_both_passes():
     rules = registered_rules()
     assert {"drc.vmem_budget", "drc.tile_alignment", "drc.scale_chain",
             "drc.sparse_digest", "drc.bucket_mesh", "drc.epilogue",
-            "drc.roofline", "drc.geometry_chain", "drc.backend",
-            "drc.schema", "lint.unguarded_write", "lint.unguarded_read",
-            "lint.lock_order", "lint.callback_in_lock",
-            "lint.check_then_act", "bench.sections", "bench.keys",
-            "bench.nan"} <= set(rules)
+            "drc.roofline", "drc.geometry_chain", "drc.input_root",
+            "drc.backend", "drc.schema", "lint.unguarded_write",
+            "lint.unguarded_read", "lint.lock_order",
+            "lint.callback_in_lock", "lint.check_then_act",
+            "bench.sections", "bench.keys", "bench.nan",
+            "bench.workloads_rows"} <= set(rules)
 
 
 def test_cli_gates_on_mutated_plan(tmp_path, capsys):

@@ -235,7 +235,9 @@ def test_engine_registry_matches_bucket_stats(tmp_cache, tiny_setup):
         eng.generate(z[:2])               # one b2 call
     hist = reg.histogram("engine.dispatch_seconds")
     for bucket, bs in eng.bucket_stats.items():
-        st = hist.summary(net=TINY.name, precision="fp32", bucket=bucket)
+        # unregistered towers carry their cfg name as the workload label
+        st = hist.summary(net=TINY.name, workload=TINY.name,
+                          precision="fp32", bucket=bucket)
         assert st["count"] == bs["calls"]
         assert st["total"] == pytest.approx(bs["seconds"])
         mean = bs["seconds"] / bs["calls"]
@@ -244,7 +246,8 @@ def test_engine_registry_matches_bucket_stats(tmp_cache, tiny_setup):
     assert reg.counter("engine.generate_calls").total() == 6
     assert reg.counter("engine.images").total() == 3 * 4 + 3 * 2
     assert reg.gauge("engine.device_count").value(
-        net=TINY.name, precision="fp32") == eng.n_devices
+        net=TINY.name, workload=TINY.name,
+        precision="fp32") == eng.n_devices
 
     rows = table2_rows(reg)
     by_bucket = {r["bucket"]: r for r in rows}

@@ -1,0 +1,307 @@
+"""Workload zoo: typed registry resolution, image-rooted tower parity
+on the plan path (incl. the Algorithm-1 S=2/K=5 geometry), int8 chain
+parity, supervised training on the serving executables with the
+train -> pin -> DRC -> serve round trip, and engine/frontend serving
+with workload-labeled metrics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from test_fault_serving import tmp_cache  # noqa: F401
+
+import repro.workloads as workloads
+from repro.models.dcnn import (DcnnConfig, DeconvLayerCfg, generator_apply,
+                               generator_init, make_fused_generator,
+                               tower_input)
+from repro.obs import MetricsRegistry, table2_rows
+from repro.optim.optimizer import AdamW
+from repro.plan import NetworkPlan, build_network_plan
+from repro.quant import (calibrate, quantize_params,
+                         quantized_generator_apply, quantized_generator_ref)
+from repro.serve import (AsyncServeFrontend, DcnnServeEngine, EngineConfig,
+                         TenantClass)
+from repro.train.supervised import SupervisedTrainer, train_supervised
+from repro.train.wgan import WganTrainer
+
+# the paper's Algorithm-1 stress geometry (S=2, K=5) on image roots:
+# an SR-style single-channel chain and a denoiser-style channel hourglass
+SR_K5S2 = DcnnConfig(
+    name="sr-k5s2-test", z_dim=1, img_hw=25, img_c=1, in_hw=7,
+    layers=(DeconvLayerCfg(1, 8, 5, 2, 2, "relu"),     # 7x7  -> 13x13
+            DeconvLayerCfg(8, 1, 5, 2, 2, "tanh")))    # 13x13 -> 25x25
+DAE_K5S2 = DcnnConfig(
+    name="dae-k5s2-test", z_dim=1, img_hw=13, img_c=1, in_hw=4,
+    layers=(DeconvLayerCfg(2, 6, 5, 2, 2, "relu"),     # 4x4  -> 7x7
+            DeconvLayerCfg(6, 1, 5, 2, 2, "tanh")))    # 7x7  -> 13x13
+
+
+# ---------------------------------------------------------------------------
+# registry resolution (typed, never a silent fallback)
+# ---------------------------------------------------------------------------
+def test_builtin_names_and_aliases():
+    assert set(workloads.names()) >= {"sr", "denoise", "mnist", "celeba"}
+    sr = workloads.get("sr")
+    assert workloads.get("sr-x2") is sr           # alias
+    assert workloads.get("sr-espcn-x2") is sr     # cfg.name
+    assert sr.cfg is workloads.SR_X2
+    assert workloads.get("dae").cfg is workloads.DAE_DENOISE
+    assert workloads.get("mnist").kind == "generative"
+
+
+def test_unknown_workload_is_typed_error():
+    with pytest.raises(workloads.UnknownWorkloadError) as ei:
+        workloads.get("sr-typo")
+    # typed: catchable as ValueError or KeyError, message lists names
+    assert isinstance(ei.value, ValueError)
+    assert isinstance(ei.value, KeyError)
+    assert "sr" in str(ei.value) and "mnist" in str(ei.value)
+    with pytest.raises(workloads.UnknownWorkloadError):
+        workloads.resolve_model("mnsit")
+    with pytest.raises(workloads.WorkloadError):
+        workloads.resolve_model(42)
+    # the engine surface: EngineConfig.model strings route through here
+    with pytest.raises(workloads.UnknownWorkloadError):
+        DcnnServeEngine.from_config(
+            EngineConfig(model="no-such-net", buckets=(2,)), params={})
+
+
+def test_resolve_model_passthrough_and_names():
+    assert workloads.resolve_model("sr") is workloads.SR_X2
+    assert workloads.resolve_model(SR_K5S2) is SR_K5S2
+    assert workloads.workload_name_for(workloads.SR_X2) == "sr"
+    # unregistered ad-hoc towers keep their own name (and still plan)
+    assert workloads.workload_name_for(SR_K5S2) == "sr-k5s2-test"
+    assert workloads.workload_for(SR_K5S2) is None
+
+
+def test_register_collision_is_typed():
+    with pytest.raises(workloads.WorkloadError):
+        workloads.register(workloads.Workload(
+            name="sr-clone", cfg=SR_K5S2, kind="generative",
+            aliases=("sr",)))           # alias collides with builtin
+    assert "sr-clone" not in workloads.names()   # nothing half-registered
+    with pytest.raises(workloads.WorkloadError):
+        workloads.Workload(name="bad", cfg=SR_K5S2, kind="supervised")
+
+
+# ---------------------------------------------------------------------------
+# input roots and calibration synthesis
+# ---------------------------------------------------------------------------
+def test_tower_input_rejects_workload_mixups():
+    from repro.models.dcnn import MNIST_DCNN
+
+    z = jnp.zeros((2, MNIST_DCNN.z_dim))
+    assert tower_input(MNIST_DCNN, z).shape == (2, 1, 1, 100)
+    img = jnp.zeros((2, 14, 14, 1))
+    assert tower_input(workloads.SR_X2, img) is img
+    with pytest.raises(ValueError, match="expects input rows"):
+        tower_input(workloads.SR_X2, z)          # latents into an SR head
+    with pytest.raises(ValueError, match="expects input rows"):
+        tower_input(MNIST_DCNN, img)             # images into a latent tower
+
+
+def test_calibration_input_latent_is_legacy_stable():
+    from repro.models.dcnn import MNIST_DCNN
+
+    got = workloads.calibration_input(MNIST_DCNN, seed=0, batch=8)
+    want = jax.random.normal(jax.random.PRNGKey(0), (8, 100), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_calibration_input_image_roots():
+    # registered image workloads calibrate on their serving distribution
+    got = workloads.calibration_input(workloads.SR_X2, seed=3, batch=4)
+    want = workloads.get("sr").training_pairs(3, 4)[0]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # unregistered image towers fall back to unit normals over the root
+    got = workloads.calibration_input(SR_K5S2, seed=1, batch=4)
+    assert got.shape == (4, 7, 7, 1)
+
+
+# ---------------------------------------------------------------------------
+# plan-path parity: fp32 pallas vs the reverse-loop oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [SR_K5S2, DAE_K5S2],
+                         ids=lambda c: c.name)
+def test_alg1_s2k5_image_root_parity(tmp_cache, cfg):
+    params, _ = generator_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4,) + cfg.input_shape)
+    ref = generator_apply(params, cfg, x, backend="reverse_loop")
+    plan = build_network_plan(cfg, batch=4, backend="pallas")
+    out = make_fused_generator(cfg, plan=plan)(params, x)
+    assert out.shape == (4, cfg.img_hw, cfg.img_hw, cfg.img_c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["sr", "denoise"])
+def test_zoo_fp32_plan_parity_and_workload_tag(tmp_cache, name):
+    w = workloads.get(name)
+    params, _ = w.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(w.calibration_batch(0, 4))
+    plan = build_network_plan(w.cfg, batch=4, backend="pallas")
+    assert plan.workload == name                 # canonical registry name
+    roundtrip = NetworkPlan.from_json(plan.to_json())
+    assert roundtrip.workload == name
+    assert roundtrip.stable_hash() == plan.stable_hash()
+    out = make_fused_generator(w.cfg, plan=plan)(params, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(w.ref(params, x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["sr", "denoise"])
+def test_zoo_int8_chain_parity(tmp_cache, name):
+    w = workloads.get(name)
+    params, _ = w.init(jax.random.PRNGKey(0))
+    x_cal = workloads.calibration_input(w.cfg, seed=0, batch=8)
+    qcfg = calibrate(params, w.cfg, x_cal)
+    qp = quantize_params(params, w.cfg, qcfg)
+    x = jnp.asarray(w.calibration_batch(1, 4))
+    y = quantized_generator_apply(qp, w.cfg, qcfg, x)
+    y_ref = quantized_generator_ref(qp, w.cfg, qcfg, x)
+    assert y.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# supervised training on the serving executables
+# ---------------------------------------------------------------------------
+def test_supervised_masked_loss_and_bucket_reuse():
+    w = workloads.get("sr")
+    tr = SupervisedTrainer(w.cfg, AdamW(lr=1e-3))
+    p, state = tr.init_state(jax.random.PRNGKey(0))
+    x, y = w.training_pairs(0, 3)                # ragged: 3 -> bucket 4
+    p2, state, met = tr.step(p, state, x, y)
+    # the masked loss is the plain MSE over the 3 valid rows only
+    pred = np.asarray(w.ref(p, jnp.asarray(x)))
+    want = float(np.mean((pred - np.asarray(y)) ** 2))
+    assert met["loss"] == pytest.approx(want, rel=1e-5)
+    # a different raggedness in the same bucket must not retrace
+    x4, y4 = w.training_pairs(1, 4)
+    tr.step(p2, state, x4, y4)
+    assert tr.trace_counts == {4: 1}
+
+
+def test_supervised_trainer_rejects_bad_backends():
+    w = workloads.get("denoise")
+    with pytest.raises(ValueError, match="inference-only"):
+        SupervisedTrainer(w.cfg, AdamW(lr=1e-3), backend="pallas_sparse")
+    plan = object.__new__(NetworkPlan)           # never reached: typed first
+    with pytest.raises(ValueError, match="pallas"):
+        SupervisedTrainer(w.cfg, AdamW(lr=1e-3), backend="xla", plan=plan)
+
+
+def test_train_pin_drc_serve_roundtrip_fp32(tmp_cache, tmp_path):
+    from repro.analysis.check import check_plan_json
+
+    w = workloads.get("sr")
+    params, trainer, history = train_supervised(
+        w, 3, jax.random.PRNGKey(0), AdamW(lr=1e-3), batch=4,
+        backend="pallas")
+    assert history[-1]["loss"] < history[0]["loss"]
+
+    path = str(tmp_path / "sr_plan.json")
+    trainer.plans[4].to_json(path)
+    report = check_plan_json(path)
+    assert report.ok(), report.render()
+    assert "drc.input_root" in report.rules_run
+
+    pinned = NetworkPlan.load(path)
+    eng = DcnnServeEngine.from_config(
+        EngineConfig(model="sr", backend="pallas", buckets=(4,),
+                     calib_batch=8),
+        params, plan=pinned)
+    x, _ = w.training_pairs(7, 4)
+    out = eng.generate(np.asarray(x, np.float32))
+    # served bit-identically to the unplanned reverse-loop reference
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(w.ref(params, jnp.asarray(x))))
+    assert eng.plan_stats["builds"] == 0         # pinned, not rebuilt
+    assert eng.plans[4].stable_hash() == trainer.plan_fingerprints()[4]
+
+
+def test_pin_serve_roundtrip_int8(tmp_cache, tmp_path):
+    w = workloads.get("denoise")
+    params, _ = w.init(jax.random.PRNGKey(0))
+    plan = build_network_plan(w.cfg, batch=4, precision="int8",
+                              params=params, calib_batch=8)
+    pinned = NetworkPlan.from_json(plan.to_json())
+    cfgE = EngineConfig(model="denoise", precision="int8", buckets=(4,),
+                        calib_batch=8)
+    eng = DcnnServeEngine.from_config(cfgE, params, plan=pinned)
+    auto = DcnnServeEngine.from_config(cfgE, params)
+    # image-root calibration is deterministic: the self-calibrating
+    # engine derives the exact scales the pinned plan carries
+    assert eng.quant_cfg == auto.quant_cfg
+    x = np.asarray(w.calibration_batch(2, 4), np.float32)
+    np.testing.assert_array_equal(eng.generate(x), auto.generate(x))
+    qp = quantize_params(params, w.cfg, eng.quant_cfg)
+    ref = quantized_generator_ref(qp, w.cfg, eng.quant_cfg, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(eng.generate(x)),
+                               np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# trainer/serve plan-hash parity (generative side rides the same pin)
+# ---------------------------------------------------------------------------
+def test_wgan_trainer_consumes_pinned_plan(tmp_cache):
+    from test_fault_serving import TINY
+
+    plan = build_network_plan(TINY, batch=4, backend="pallas")
+    tr = WganTrainer(TINY, AdamW(lr=1e-4), AdamW(lr=1e-4),
+                     backend="pallas", plan=plan)
+    tr._gen_for(4)
+    assert tr.plans[4] is plan                   # substituted, not rebuilt
+    assert tr.plan_fingerprints()[4] == plan.stable_hash()
+
+
+def test_wgan_trainer_rejects_hash_drift(tmp_cache):
+    from test_fault_serving import TINY
+
+    plan = build_network_plan(TINY, batch=4, backend="pallas")
+    drifted = dataclasses.replace(plan, workload="sr")
+    tr = WganTrainer(TINY, AdamW(lr=1e-4), AdamW(lr=1e-4),
+                     backend="pallas", plan=drifted)
+    with pytest.raises(ValueError, match="re-pin"):
+        tr._gen_for(4)
+
+
+def test_supervised_trainer_rejects_hash_drift(tmp_cache):
+    w = workloads.get("sr")
+    plan = build_network_plan(w.cfg, batch=4, backend="pallas")
+    drifted = dataclasses.replace(plan, workload="denoise")
+    tr = SupervisedTrainer(w.cfg, AdamW(lr=1e-3), backend="pallas",
+                           plan=drifted)
+    with pytest.raises(ValueError, match="re-pin"):
+        tr._gen_for(4)
+
+
+# ---------------------------------------------------------------------------
+# serving: workload label through engine stats, frontend and Table II
+# ---------------------------------------------------------------------------
+def test_frontend_serves_workload_with_labeled_metrics(tmp_cache):
+    w = workloads.get("sr")
+    params, _ = w.init(jax.random.PRNGKey(0))
+    reg = MetricsRegistry()
+    fe = AsyncServeFrontend.from_config(
+        EngineConfig(model="sr", backend="pallas", buckets=(2,),
+                     calib_batch=8),
+        params, [TenantClass("default", slo_ms=None)],
+        precisions=("fp32",), metrics=reg)
+    try:
+        x, _ = w.training_pairs(0, 2)
+        outs = []
+        for i in range(3):                       # >1 call: healthy samples
+            rid = fe.submit(np.asarray(x, np.float32), "default")
+            outs.append(fe.result(rid, timeout_s=300))
+        st = fe.stats()
+    finally:
+        fe.close()
+    assert st["workload"] == "sr"
+    np.testing.assert_array_equal(
+        np.asarray(outs[0]), np.asarray(w.ref(params, jnp.asarray(x))))
+    rows = [r for r in table2_rows(reg) if r["workload"] == "sr"]
+    assert rows and all(r["net"] == "sr-espcn-x2" for r in rows)
